@@ -1,0 +1,89 @@
+"""Fig. 3 reproduction: bisection bandwidth, single block vs. two concurrent
+blocks (mpptest analogue).
+
+Run in a subprocess with 8 host devices (benchmarks/run.py does this): block
+A = 4 devices, block B = 4 devices, disjoint.  The workload is a bisection
+exchange (each half of a block swaps its shard with the other half).  We
+measure A alone, then A while B runs the same exchange concurrently from a
+second thread — the paper's red vs. green curves.  On this CPU stand-in the
+shared resource is host memory bandwidth + the dispatching Python thread,
+which plays the role of the paper's shared master node; the structural
+ICI-link model (core/interference.py) covers the real-TPU fabric side.
+"""
+import os
+import sys
+
+if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def make_block(devices):
+    mesh = Mesh(np.asarray(devices).reshape(len(devices), 1),
+                ("data", "model"))
+    sh = NamedSharding(mesh, P("data", None))
+
+    @jax.jit
+    def exchange(x):
+        return jnp.flip(x, axis=0) * 2.0      # halves swap across bisection
+
+    return mesh, sh, exchange
+
+
+def bench_block(sh, exchange, n_bytes, iters=20):
+    cols = max(n_bytes // 4 // 8, 1)
+    x = jax.device_put(jnp.ones((8, cols), jnp.float32), sh)
+    x = exchange(x)  # warmup/compile
+    jax.block_until_ready(x)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        x = exchange(x)
+    jax.block_until_ready(x)
+    return (time.perf_counter() - t0) / iters
+
+
+def main():
+    devs = jax.devices()
+    assert len(devs) >= 8, "need 8 devices (run via benchmarks/run.py)"
+    _, sh_a, ex_a = make_block(devs[:4])
+    _, sh_b, ex_b = make_block(devs[4:8])
+
+    sizes = [2 ** i for i in range(12, 25)]     # 4 KB .. 16 MB
+    print("name,us_per_call,derived")
+    results = []
+    for size in sizes:
+        t_single = bench_block(sh_a, ex_a, size)
+
+        stop = threading.Event()
+
+        def contend():
+            while not stop.is_set():
+                bench_block(sh_b, ex_b, size, iters=4)
+
+        th = threading.Thread(target=contend, daemon=True)
+        th.start()
+        t_multi = bench_block(sh_a, ex_a, size)
+        stop.set()
+        th.join(timeout=10)
+
+        bw_single = size / t_single / 1e9
+        bw_multi = size / t_multi / 1e9
+        results.append((size, bw_single, bw_multi))
+        print(f"bisect_single_{size},{t_single*1e6:.1f},{bw_single:.3f}")
+        print(f"bisect_multi_{size},{t_multi*1e6:.1f},{bw_multi:.3f}")
+
+    # paper's verdict: multi-block affects performance "only slightly"
+    big = results[-4:]
+    ratio = np.mean([m / s for _, s, m in big])
+    print(f"bisect_bw_ratio_large_msgs,0,{ratio:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""§4 claim on real tenant jobs: training step time of a block running alone
+vs. the same block while a second block trains concurrently (shared host =
+the paper's shared master node).  Run via benchmarks/run.py (8 devices).
+"""
+import os
+
+if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import time
+
+import jax
+import numpy as np
+
+import repro.configs as C
+from repro.core.controller import ClusterController
+from repro.core.runtime import JobSpec
+from repro.core.topology import Topology
+from repro.models.config import ShapeConfig
+from repro.train.optimizer import OptConfig
+
+
+def timed_steps(ctl, rounds=6):
+    out = ctl.step_all(rounds=rounds)
+    return {a: float(np.median([r["step_s"] for r in rs[1:]]))
+            for a, rs in out.items()}
+
+
+def main():
+    topo = Topology(n_pods=1, pod_x=4, pod_y=2)
+    ctl = ClusterController(topo, ckpt_root="artifacts/bench_ckpt")
+    shape = ShapeConfig("b", "train", seq_len=128, global_batch=8,
+                        microbatch=1)
+    opt = OptConfig(warmup_steps=2, total_steps=100)
+
+    a1 = ctl.register("alice", "dense job", 4, arch="deepseek_7b")
+    g1 = ctl.review(a1)
+    ctl.confirm(a1, g1.token)
+    ctl.activate(a1, JobSpec(C.get_smoke("deepseek_7b"), shape, opt=opt))
+    ctl.run(a1)
+
+    print("name,us_per_call,derived")
+    t_alone = timed_steps(ctl)[a1]
+    print(f"train_step_single_block,{t_alone*1e6:.0f},1.0")
+
+    a2 = ctl.register("bob", "xlstm job", 4, arch="xlstm_350m")
+    g2 = ctl.review(a2)
+    ctl.confirm(a2, g2.token)
+    ctl.activate(a2, JobSpec(C.get_smoke("xlstm_350m"), shape, opt=opt))
+    ctl.run(a2)
+    rep = ctl.interference_report()
+
+    both = timed_steps(ctl)
+    t_multi = both[a1]
+    print(f"train_step_multi_block,{t_multi*1e6:.0f},{t_multi/t_alone:.3f}")
+    print(f"shared_links,0,{sum(rep.shared_links.values())}")
+    print(f"isolated,0,{int(rep.isolated)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Roofline table from the dry-run artifacts (no devices needed).
+
+Reads artifacts/dryrun/sweep.jsonl (written by repro.launch.dryrun --all)
+and emits one CSV row per executed cell: the modeled step time (max of the
+three terms, us) and the roofline fraction as `derived`.
+"""
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_cells(pattern="sweep.jsonl"):
+    cells = {}
+    for path in sorted(glob.glob(os.path.join(ART, pattern))):
+        with open(path) as f:
+            for line in f:
+                try:
+                    d = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                key = (d.get("arch"), d.get("shape"), d.get("mesh"))
+                cells[key] = d          # later runs override earlier
+    return cells
+
+
+def main():
+    cells = load_cells()
+    print("name,us_per_call,derived")
+    if not cells:
+        print("roofline_no_artifacts,0,0")
+        return
+    for (arch, shape, mesh), d in sorted(cells.items()):
+        status = d.get("status", "?")
+        tag = f"roofline_{arch}_{shape}_{mesh}"
+        if status != "ok":
+            print(f"{tag},0,skip")
+            continue
+        r = d["roofline"]
+        print(f"{tag},{r['step_time_s']*1e6:.0f},{r['roofline_fraction']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

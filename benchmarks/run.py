@@ -1,0 +1,63 @@
+"""Benchmark harness — one section per paper artifact.
+
+  Fig. 3  bisection bandwidth, 1 vs 2 blocks   -> benchmarks/bisection.py
+          (measured, subprocess w/ 8 host devices) + structural link model
+  §4      multi-block overhead on real jobs    -> benchmarks/multiblock_overhead.py
+  (assignment) roofline table per cell         -> benchmarks/roofline_report.py
+
+Prints ``name,us_per_call,derived`` CSV.  Subprocesses own the multi-device
+XLA flag so this process (and pytest) keep a single device.
+"""
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+SRC = os.path.join(HERE, "..", "src")
+
+
+def run_sub(script: str, devices: int) -> None:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, os.path.join(HERE, script)],
+                       env=env, capture_output=True, text=True, timeout=1800)
+    if r.returncode != 0:
+        print(f"{script},0,FAILED")
+        sys.stderr.write(r.stderr[-2000:])
+        return
+    for line in r.stdout.splitlines():
+        if line and not line.startswith("name,"):
+            print(line)
+
+
+def run_structural() -> None:
+    """Structural Fig. 3 model: contiguous TPU blocks share zero links."""
+    sys.path.insert(0, SRC)
+    from repro.core import interference
+    from repro.core.topology import Topology, rect_coords
+    topo = Topology(n_pods=1, pod_x=16, pod_y=16)
+    a = rect_coords(0, 0, 0, 8, 16)        # half pod
+    b = rect_coords(0, 8, 0, 8, 16)        # other half
+    rows = interference.predicted_fig3(
+        topo, a, b, [2 ** i for i in range(12, 26, 2)])
+    for r in rows:
+        print(f"fig3_struct_single_{r['bytes']},0,{r['bw_single_GBs']:.2f}")
+        print(f"fig3_struct_multi_{r['bytes']},0,{r['bw_multi_GBs']:.2f}")
+    print(f"fig3_struct_shared_links,0,{rows[0]['shared_links']}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    print("# --- Fig.3 structural (TPU torus link model) ---")
+    run_structural()
+    print("# --- Fig.3 measured (8 host devices, 2 blocks) ---")
+    run_sub("bisection.py", devices=8)
+    print("# --- multi-block overhead on tenant train jobs ---")
+    run_sub("multiblock_overhead.py", devices=8)
+    print("# --- roofline table (from dry-run artifacts) ---")
+    run_sub("roofline_report.py", devices=1)
+
+
+if __name__ == "__main__":
+    main()

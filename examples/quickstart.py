@@ -1,0 +1,28 @@
+"""Quickstart: train a reduced-config model end-to-end with the public API.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Picks the xLSTM family (smallest), builds sharded train state on whatever
+devices exist, runs 60 steps of the production train step (microbatched,
+remat, AdamW) on the synthetic pipeline, checkpoints, and restores.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import train as train_cli
+
+
+def main():
+    return train_cli.main([
+        "--arch", "xlstm_350m", "--smoke",
+        "--steps", "60", "--seq-len", "128", "--global-batch", "4",
+        "--microbatch", "2", "--lr", "1e-3",
+        "--ckpt-dir", "artifacts/quickstart_ckpt", "--ckpt-every", "25",
+        "--log-every", "5",
+    ])
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

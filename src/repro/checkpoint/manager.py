@@ -1,0 +1,151 @@
+"""Fault-tolerant checkpointing: atomic, async, namespaced, self-describing.
+
+Layout (one directory per step, per block namespace):
+
+    <root>/<namespace>/step_<n>/
+        manifest.json      # tree structure, shapes, dtypes, crc32 per leaf
+        leaf_00000.npy ...
+
+Writes go to ``step_<n>.tmp`` and are atomically renamed, so a crash mid-save
+never corrupts the latest checkpoint.  ``save_async`` runs serialization on a
+background thread (off the training critical path).  Restore re-places leaves
+with any target sharding (elastic resize / failure migration re-sharding).
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import json
+import os
+import shutil
+import zlib
+from typing import Any, Dict, List, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy can't serialize bf16/fp8 natively: store a byte view + logical dtype
+_EXOTIC = {"bfloat16", "float8_e4m3fn", "float8_e5m2"}
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, root: str, namespace: str = "default", keep: int = 3):
+        self.root = root
+        self.namespace = namespace
+        self.keep = keep
+        self.dir = os.path.join(root, namespace)
+        os.makedirs(self.dir, exist_ok=True)
+        self._pool = cf.ThreadPoolExecutor(max_workers=1)
+        self._pending: Optional[cf.Future] = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree) -> str:
+        """Synchronous atomic save.  Returns the checkpoint path."""
+        # Pull to host first (cheap for test-sized states; on real pods this
+        # is where a sharded-save fan-out would slot in).
+        host_leaves = [np.asarray(l) for l in jax.tree.leaves(tree)]
+        return self._write(step, tree, host_leaves)
+
+    def save_async(self, step: int, tree) -> None:
+        """Async save: device->host copy happens now; file IO in background."""
+        self.wait()
+        host_leaves = [np.asarray(l) for l in jax.tree.leaves(tree)]
+        self._pending = self._pool.submit(self._write, step, tree, host_leaves)
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    def _write(self, step: int, tree, host_leaves: List[np.ndarray]) -> str:
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        treedef = jax.tree_util.tree_structure(tree)
+        manifest = {"step": step, "treedef": str(treedef), "leaves": []}
+        for i, leaf in enumerate(host_leaves):
+            fname = f"leaf_{i:05d}.npy"
+            logical = str(leaf.dtype)
+            to_write = (leaf.view(np.uint8).reshape(*leaf.shape, -1)
+                        if logical in _EXOTIC else leaf)
+            np.save(os.path.join(tmp, fname), to_write)
+            manifest["leaves"].append({
+                "file": fname,
+                "shape": list(leaf.shape),
+                "dtype": logical,
+                "crc32": zlib.crc32(np.ascontiguousarray(to_write).tobytes()),
+            })
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+        return final
+
+    # --------------------------------------------------------------- restore
+    def steps(self) -> List[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, like_tree, step: Optional[int] = None, shardings=None,
+                verify: bool = True):
+        """Restore into the structure of ``like_tree``.
+
+        ``shardings``: optional pytree (same structure) of NamedShardings —
+        leaves are re-placed with them, enabling restore onto a *different*
+        mesh than the one that saved (elastic resize / block migration).
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        leaves, treedef = jax.tree_util.tree_flatten(like_tree)
+        if len(manifest["leaves"]) != len(leaves):
+            raise ValueError(
+                f"checkpoint has {len(manifest['leaves'])} leaves, "
+                f"expected {len(leaves)}")
+        shard_leaves = (jax.tree.leaves(shardings, is_leaf=lambda x: x is None
+                                        or hasattr(x, "device_set"))
+                        if shardings is not None else [None] * len(leaves))
+        out = []
+        for meta, like, shd in zip(manifest["leaves"], leaves, shard_leaves):
+            arr = np.load(os.path.join(path, meta["file"]))
+            if verify:
+                crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+                if crc != meta["crc32"]:
+                    raise IOError(f"crc mismatch in {meta['file']} "
+                                  f"(corrupt checkpoint {path})")
+            if meta["dtype"] in _EXOTIC:
+                arr = arr.view(getattr(ml_dtypes, meta["dtype"])).reshape(
+                    meta["shape"])
+            if shd is not None:
+                out.append(jax.device_put(arr, shd))
+            elif hasattr(like, "dtype"):
+                out.append(jax.numpy.asarray(arr, dtype=like.dtype))
+            else:   # python scalar leaf (e.g. step counters)
+                out.append(arr.item() if getattr(arr, "ndim", 0) == 0 else arr)
+        return jax.tree_util.tree_unflatten(treedef, out), step
+
+    # -------------------------------------------------------------------- gc
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)

@@ -1,0 +1,79 @@
+"""Architecture config registry.
+
+Every assigned architecture is a module exporting ``CONFIG`` (full size) and
+``smoke_config()`` (reduced same-family config for CPU tests).  Select with
+``repro.configs.get(name)`` or ``--arch <id>`` on the launchers.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig, SHAPES_BY_NAME, ShapeConfig
+
+ARCH_IDS: List[str] = [
+    "llama4_maverick_400b",
+    "deepseek_v2_236b",
+    "xlstm_350m",
+    "starcoder2_15b",
+    "deepseek_7b",
+    "mistral_nemo_12b",
+    "yi_34b",
+    "pixtral_12b",
+    "hubert_xlarge",
+    "zamba2_2p7b",
+]
+
+_ALIASES = {
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "xlstm-350m": "xlstm_350m",
+    "starcoder2-15b": "starcoder2_15b",
+    "deepseek-7b": "deepseek_7b",
+    "mistral-nemo-12b": "mistral_nemo_12b",
+    "yi-34b": "yi_34b",
+    "pixtral-12b": "pixtral_12b",
+    "hubert-xlarge": "hubert_xlarge",
+    "zamba2-2.7b": "zamba2_2p7b",
+}
+
+
+def canonical(name: str) -> str:
+    name = _ALIASES.get(name, name).replace("-", "_")
+    if name not in ARCH_IDS:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_IDS}")
+    return name
+
+
+def get(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.CONFIG
+
+
+def get_smoke(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.smoke_config()
+
+
+def shape(name: str) -> ShapeConfig:
+    return SHAPES_BY_NAME[name]
+
+
+# --- assigned-cell table: which (arch, shape) cells execute vs. skip -------
+
+def cell_status(arch: str, shape_name: str) -> str:
+    """'run' or a skip reason (documented in DESIGN.md §Arch-applicability)."""
+    arch = canonical(arch)
+    cfg = get(arch)
+    if shape_name in ("decode_32k", "long_500k") and cfg.is_encoder:
+        return "skip: encoder-only arch has no autoregressive decode"
+    if shape_name == "long_500k" and cfg.family not in ("xlstm", "hybrid"):
+        return "skip: full-attention arch; 500k ctx needs sub-quadratic mixing"
+    return "run"
+
+
+def all_cells():
+    """Yield (arch, shape_name, status) for the full 40-cell assignment."""
+    for a in ARCH_IDS:
+        for s in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+            yield a, s, cell_status(a, s)

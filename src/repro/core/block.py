@@ -1,0 +1,100 @@
+"""Block model: the paper's per-tenant unit of allocation.
+
+A *block* = an admin-assigned, disjoint set of chips + its own parallel
+runtime configuration ("MPD ring" in the paper: per-user daemon + config
+files).  Here: BlockRequest (the user's application), BlockGrant (the
+admin's assignment: chip coords, mesh shape, capability token) and the
+lifecycle state machine of Fig. 2 of the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import secrets
+import time
+from typing import List, Optional, Tuple
+
+from repro.core.topology import Coord
+
+
+class BlockState(str, enum.Enum):
+    REQUESTED = "requested"       # (1) user registered an application
+    APPROVED = "approved"         # (2) admin reviewed, nodes assigned
+    CONFIRMED = "confirmed"       # (3) user reconfirmed the assignment
+    ACTIVE = "active"             # (3b) nodes powered, daemons up (runtime built)
+    RUNNING = "running"           # (5) program uploaded and executing
+    DONE = "done"                 # (7) finished, results downloadable
+    EXPIRED = "expired"           # usage period over, nodes shut down
+    FAILED = "failed"             # chip failure / fatal error
+    DENIED = "denied"             # admin rejected the application
+
+
+# legal transitions of the lifecycle state machine
+TRANSITIONS = {
+    BlockState.REQUESTED: {BlockState.APPROVED, BlockState.DENIED},
+    BlockState.APPROVED: {BlockState.CONFIRMED, BlockState.DENIED,
+                          BlockState.EXPIRED},
+    BlockState.CONFIRMED: {BlockState.ACTIVE, BlockState.EXPIRED},
+    BlockState.ACTIVE: {BlockState.RUNNING, BlockState.EXPIRED,
+                        BlockState.FAILED},
+    BlockState.RUNNING: {BlockState.DONE, BlockState.FAILED,
+                         BlockState.EXPIRED, BlockState.ACTIVE},
+    BlockState.FAILED: {BlockState.ACTIVE, BlockState.EXPIRED},
+    BlockState.DONE: {BlockState.EXPIRED, BlockState.RUNNING},
+}
+
+
+@dataclasses.dataclass
+class BlockRequest:
+    user: str
+    job_description: str
+    n_chips: int
+    arch: str = ""                    # architecture config id
+    shape: str = "train_4k"           # input-shape cell
+    duration_s: float = 3600.0        # requested usage period
+
+
+@dataclasses.dataclass
+class BlockGrant:
+    block_id: str
+    coords: List[Coord]               # admin-assigned chips (user-immutable)
+    mesh_shape: Tuple[int, int]       # (data, model) within the block
+    token: str                        # capability token (paper: MPD_SECRETWORD)
+    expires_at: float                 # end of usage period
+
+    @staticmethod
+    def new(coords: List[Coord], mesh_shape: Tuple[int, int],
+            duration_s: float) -> "BlockGrant":
+        return BlockGrant(
+            block_id=f"blk_{secrets.token_hex(4)}",
+            coords=list(coords),
+            mesh_shape=mesh_shape,
+            token=secrets.token_hex(16),
+            expires_at=time.time() + duration_s,
+        )
+
+    @property
+    def n_chips(self) -> int:
+        return len(self.coords)
+
+
+@dataclasses.dataclass
+class Block:
+    request: BlockRequest
+    state: BlockState = BlockState.REQUESTED
+    grant: Optional[BlockGrant] = None
+    history: List[Tuple[float, str]] = dataclasses.field(default_factory=list)
+    result_path: Optional[str] = None
+    failure_reason: Optional[str] = None
+
+    def transition(self, new_state: BlockState, note: str = "") -> None:
+        if new_state not in TRANSITIONS.get(self.state, set()):
+            raise ValueError(
+                f"illegal transition {self.state.value} -> {new_state.value} "
+                f"({self.request.user}: {note})")
+        self.state = new_state
+        self.history.append((time.time(), f"{new_state.value}: {note}"))
+
+    @property
+    def block_id(self) -> Optional[str]:
+        return self.grant.block_id if self.grant else None

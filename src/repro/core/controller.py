@@ -1,0 +1,215 @@
+"""ClusterController — the paper's master node + administrator, TPU-native.
+
+Owns the chip inventory (Partitioner), the application workflow (Registry),
+per-block runtimes, and the Monitor.  One controller process drives *all*
+blocks concurrently (the shared-master property the paper's Fig. 3
+measures); per-block dispatch is asynchronous, so blocks overlap on device
+time and only serialize on the host Python thread.
+
+Fault tolerance: chip-failure injection marks chips unhealthy, fails the
+owning block, re-carves a fresh sub-mesh from the free pool and restores the
+block's state from its checkpoint namespace.  Elastic resize uses the same
+re-carve + reshard-restore path.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core import interference
+from repro.core.block import Block, BlockGrant, BlockRequest, BlockState
+from repro.core.monitor import Monitor
+from repro.core.partition import AllocationError, Partitioner, mesh_shape_for
+from repro.core.registry import Registry
+from repro.core.runtime import BlockRuntime, JobSpec
+from repro.core.topology import Coord, Topology
+
+
+class ClusterController:
+    def __init__(self, topo: Topology, devices: Optional[Sequence] = None,
+                 ckpt_root: str = "artifacts/ckpt",
+                 state_path: Optional[str] = None):
+        self.topo = topo
+        self.devices = list(devices) if devices is not None else jax.devices()
+        if len(self.devices) < topo.n_chips:
+            raise ValueError(
+                f"topology needs {topo.n_chips} devices, have "
+                f"{len(self.devices)} (set xla_force_host_platform_device_count)")
+        self.partitioner = Partitioner(topo)
+        self.registry = Registry(state_path=state_path)
+        self.monitor = Monitor()
+        self.runtimes: Dict[str, BlockRuntime] = {}   # app_id -> runtime
+        self.ckpt_root = ckpt_root
+
+    # -------------------------------------------------- device mapping
+    def devices_for(self, coords: Sequence[Coord]) -> List:
+        return [self.devices[self.topo.chip_index(c)] for c in coords]
+
+    # -------------------------------------------------- workflow (Fig. 2)
+    def register(self, user: str, job_description: str, n_chips: int,
+                 arch: str = "", shape: str = "train_4k",
+                 duration_s: float = 3600.0) -> str:
+        return self.registry.register(BlockRequest(
+            user=user, job_description=job_description, n_chips=n_chips,
+            arch=arch, shape=shape, duration_s=duration_s))
+
+    def review(self, app_id: str, *, approve: bool = True,
+               pod: Optional[int] = None, n_chips: Optional[int] = None) -> Optional[BlockGrant]:
+        """Admin review: assign a contiguous block (possibly a different size
+        than requested — the admin has full control, paper §3)."""
+        blk = self.registry.get(app_id)
+        if not approve:
+            self.registry.deny(app_id, "admin denied")
+            return None
+        n = n_chips or blk.request.n_chips
+        tmp_grant_id = f"pending_{app_id}"
+        coords = self.partitioner.allocate(n, tmp_grant_id, pod=pod)
+        grant = BlockGrant.new(coords, mesh_shape_for(n),
+                               blk.request.duration_s)
+        # re-tag chips with the real block id
+        self.partitioner.release(tmp_grant_id)
+        for c in coords:
+            self.partitioner.chips[c].owner = grant.block_id
+        self.registry.approve(app_id, grant)
+        return grant
+
+    def confirm(self, app_id: str, token: str) -> None:
+        self.registry.confirm(app_id, token)
+
+    def activate(self, app_id: str, job: JobSpec) -> BlockRuntime:
+        """Power on the block's chips and boot its runtime (paper: switch
+        nodes on + activate the user's MPD daemons)."""
+        blk = self.registry.get(app_id)
+        assert blk.grant is not None
+        devices = self.devices_for(blk.grant.coords)
+        rt = BlockRuntime(blk.grant, job, devices, self.ckpt_root)
+        rt.init_state()
+        self.runtimes[app_id] = rt
+        self.registry.set_state(app_id, BlockState.ACTIVE, "runtime built")
+        return rt
+
+    def run(self, app_id: str) -> None:
+        self.registry.set_state(app_id, BlockState.RUNNING, "job started")
+
+    def download(self, app_id: str) -> Dict:
+        """Step (7): the user collects results (metrics + checkpoint path)."""
+        blk = self.registry.get(app_id)
+        rt = self.runtimes.get(app_id)
+        stats = self.monitor.stats.get(blk.block_id or "", None)
+        if blk.state == BlockState.RUNNING:
+            self.registry.set_state(app_id, BlockState.DONE, "results ready")
+        return {
+            "steps": rt.step_count if rt else 0,
+            "metrics": stats.last_metrics if stats else {},
+            "checkpoints": rt.ckpt.steps() if rt else [],
+            "checkpoint_dir": rt.ckpt.dir if rt else None,
+        }
+
+    def expire(self, app_id: str) -> None:
+        """Usage period over: shut nodes down, free the block."""
+        blk = self.registry.get(app_id)
+        if blk.grant:
+            self.partitioner.release(blk.grant.block_id)
+        self.runtimes.pop(app_id, None)
+        self.registry.set_state(app_id, BlockState.EXPIRED, "period over")
+
+    def tick(self, now: Optional[float] = None) -> List[str]:
+        """Periodic housekeeping: auto-expire blocks past their period."""
+        expired = self.registry.expired(now)
+        for app_id in expired:
+            self.expire(app_id)
+        return expired
+
+    # ------------------------------------------------ concurrent execution
+    def step_all(self, rounds: int = 1, sync_every: int = 1) -> Dict[str, List[Dict]]:
+        """Round-robin dispatch across all RUNNING blocks.
+
+        Dispatch is async (jax queues the work per block's devices); blocks
+        execute concurrently on their disjoint sub-meshes while the host
+        thread rotates — the multi-block concurrency of the paper.
+        """
+        out: Dict[str, List[Dict]] = {}
+        running = self.registry.by_state(BlockState.RUNNING)
+        for r in range(rounds):
+            t0 = {}
+            for app_id in running:
+                rt = self.runtimes[app_id]
+                t0[app_id] = time.perf_counter()
+                rt.step_async()
+            for app_id in running:
+                rt = self.runtimes[app_id]
+                jax.block_until_ready(jax.tree.leaves(
+                    rt.state if rt.job.kind == "train" else rt.token))
+                dt = time.perf_counter() - t0[app_id]
+                blk = self.registry.get(app_id)
+                self.monitor.record_step(blk.block_id, dt,
+                                         blk.grant.n_chips)
+                out.setdefault(app_id, []).append({"step_s": dt})
+        return out
+
+    # ------------------------------------------------------ fault handling
+    def inject_chip_failure(self, coord: Coord) -> Optional[str]:
+        """Simulate a chip failure.  Returns the app_id that was failed over
+        (and already recovered), if any block owned the chip."""
+        block_id = self.partitioner.mark_unhealthy(coord)
+        if block_id is None:
+            return None
+        app_id = self.registry.by_block_id(block_id)
+        if app_id is None:
+            return None
+        blk = self.registry.get(app_id)
+        blk.failure_reason = f"chip {coord} failed"
+        self.registry.set_state(app_id, BlockState.FAILED, str(coord))
+        self.recover_block(app_id)
+        return app_id
+
+    def recover_block(self, app_id: str) -> BlockRuntime:
+        """Re-carve a healthy sub-mesh and restore from checkpoint."""
+        blk = self.registry.get(app_id)
+        old_rt = self.runtimes.get(app_id)
+        assert blk.grant is not None and old_rt is not None
+        self.partitioner.release(blk.grant.block_id)
+        coords = self.partitioner.allocate(blk.grant.n_chips,
+                                           blk.grant.block_id)
+        new_grant = BlockGrant.new(coords, blk.grant.mesh_shape,
+                                   max(blk.grant.expires_at - time.time(), 60))
+        new_grant = BlockGrant(block_id=blk.grant.block_id, coords=coords,
+                               mesh_shape=blk.grant.mesh_shape,
+                               token=blk.grant.token,
+                               expires_at=blk.grant.expires_at)
+        blk.grant = new_grant
+        rt = BlockRuntime.rebuild(old_rt, new_grant,
+                                  self.devices_for(coords), self.ckpt_root)
+        self.runtimes[app_id] = rt
+        self.registry.set_state(app_id, BlockState.ACTIVE, "recovered")
+        self.registry.set_state(app_id, BlockState.RUNNING, "resumed")
+        return rt
+
+    def resize_block(self, app_id: str, new_n_chips: int) -> BlockRuntime:
+        """Elastic scaling: grow/shrink a running block; state is resharded
+        onto the new sub-mesh via checkpoint restore."""
+        blk = self.registry.get(app_id)
+        old_rt = self.runtimes[app_id]
+        old_rt.save(async_=False)
+        coords = self.partitioner.resize(blk.grant.block_id, new_n_chips)
+        new_grant = BlockGrant(block_id=blk.grant.block_id, coords=coords,
+                               mesh_shape=mesh_shape_for(new_n_chips),
+                               token=blk.grant.token,
+                               expires_at=blk.grant.expires_at)
+        blk.grant = new_grant
+        rt = BlockRuntime.rebuild(old_rt, new_grant,
+                                  self.devices_for(coords), self.ckpt_root)
+        self.runtimes[app_id] = rt
+        return rt
+
+    # ------------------------------------------------------- interference
+    def interference_report(self) -> interference.InterferenceReport:
+        blocks = {}
+        for app_id in self.registry.by_state(BlockState.ACTIVE,
+                                             BlockState.RUNNING):
+            blk = self.registry.get(app_id)
+            blocks[blk.block_id] = blk.grant.coords
+        return interference.analyze_blocks(self.topo, blocks)

@@ -1,0 +1,90 @@
+"""Monitoring: per-block heartbeats, step-time EWMA, straggler detection,
+usage accounting.  The paper's step (6): "the administrator and automated
+system will monitor the usage of all running users".
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import threading
+import time
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass
+class BlockStats:
+    block_id: str
+    steps: int = 0
+    last_heartbeat: float = 0.0
+    ewma_step_s: Optional[float] = None
+    step_times: List[float] = dataclasses.field(default_factory=list)
+    chip_seconds: float = 0.0
+    last_metrics: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+class Monitor:
+    EWMA_ALPHA = 0.2
+    STRAGGLER_FACTOR = 1.5
+    HEARTBEAT_TIMEOUT_S = 60.0
+
+    def __init__(self):
+        self._lock = threading.RLock()
+        self.stats: Dict[str, BlockStats] = {}
+
+    def _get(self, block_id: str) -> BlockStats:
+        with self._lock:
+            if block_id not in self.stats:
+                self.stats[block_id] = BlockStats(block_id)
+            return self.stats[block_id]
+
+    def record_step(self, block_id: str, step_s: float, n_chips: int,
+                    metrics: Optional[Dict[str, float]] = None) -> None:
+        with self._lock:
+            s = self._get(block_id)
+            s.steps += 1
+            s.last_heartbeat = time.time()
+            s.step_times.append(step_s)
+            if len(s.step_times) > 512:
+                s.step_times = s.step_times[-256:]
+            s.ewma_step_s = (step_s if s.ewma_step_s is None else
+                             (1 - self.EWMA_ALPHA) * s.ewma_step_s
+                             + self.EWMA_ALPHA * step_s)
+            s.chip_seconds += step_s * n_chips
+            if metrics:
+                s.last_metrics = dict(metrics)
+
+    def heartbeat(self, block_id: str) -> None:
+        self._get(block_id).last_heartbeat = time.time()
+
+    # ----------------------------------------------------------- stragglers
+    def stragglers(self) -> List[str]:
+        """Blocks whose EWMA step time exceeds STRAGGLER_FACTOR x their own
+        median — the signal the controller uses to trigger migration."""
+        out = []
+        with self._lock:
+            for s in self.stats.values():
+                if s.ewma_step_s is None or len(s.step_times) < 8:
+                    continue
+                med = statistics.median(s.step_times)
+                if med > 0 and s.ewma_step_s > self.STRAGGLER_FACTOR * med:
+                    out.append(s.block_id)
+        return out
+
+    def dead_blocks(self, now: Optional[float] = None) -> List[str]:
+        now = now or time.time()
+        with self._lock:
+            return [s.block_id for s in self.stats.values()
+                    if s.steps > 0 and
+                    now - s.last_heartbeat > self.HEARTBEAT_TIMEOUT_S]
+
+    def report(self) -> Dict[str, Dict]:
+        with self._lock:
+            return {
+                bid: {
+                    "steps": s.steps,
+                    "ewma_step_s": s.ewma_step_s,
+                    "chip_seconds": round(s.chip_seconds, 3),
+                    "last_metrics": s.last_metrics,
+                }
+                for bid, s in self.stats.items()
+            }

@@ -1,0 +1,111 @@
+"""User/application registry — the paper's web-workflow state (Fig. 2),
+persisted as JSON so an external UI/CLI can observe it.
+
+Steps (paper §3): (1) register -> (2) admin review+assign -> (3) user
+reconfirm -> (4) adjust program -> (5) upload+run -> (6) monitor ->
+(7) download; auto-shutdown at period end.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+import time
+from typing import Dict, List, Optional
+
+from repro.core.block import Block, BlockGrant, BlockRequest, BlockState
+
+
+class Registry:
+    def __init__(self, state_path: Optional[str] = None):
+        self._lock = threading.RLock()
+        self.apps: Dict[str, Block] = {}
+        self._next_id = 1
+        self.state_path = state_path
+
+    # ------------------------------------------------------------ workflow
+    def register(self, request: BlockRequest) -> str:
+        with self._lock:
+            app_id = f"app_{self._next_id:04d}"
+            self._next_id += 1
+            self.apps[app_id] = Block(request=request)
+            self.apps[app_id].history.append(
+                (time.time(), f"registered by {request.user}"))
+            self._persist()
+            return app_id
+
+    def approve(self, app_id: str, grant: BlockGrant) -> None:
+        with self._lock:
+            blk = self.apps[app_id]
+            blk.grant = grant
+            blk.transition(BlockState.APPROVED,
+                           f"{grant.n_chips} chips assigned")
+            self._persist()
+
+    def deny(self, app_id: str, reason: str = "") -> None:
+        with self._lock:
+            self.apps[app_id].transition(BlockState.DENIED, reason)
+            self._persist()
+
+    def confirm(self, app_id: str, token: str) -> None:
+        with self._lock:
+            blk = self.apps[app_id]
+            if blk.grant is None or token != blk.grant.token:
+                raise PermissionError("bad block token")
+            blk.transition(BlockState.CONFIRMED, "user reconfirmed")
+            self._persist()
+
+    def set_state(self, app_id: str, state: BlockState, note: str = "") -> None:
+        with self._lock:
+            self.apps[app_id].transition(state, note)
+            self._persist()
+
+    # -------------------------------------------------------------- queries
+    def get(self, app_id: str) -> Block:
+        return self.apps[app_id]
+
+    def by_state(self, *states: BlockState) -> List[str]:
+        with self._lock:
+            return [a for a, b in self.apps.items() if b.state in states]
+
+    def by_block_id(self, block_id: str) -> Optional[str]:
+        with self._lock:
+            for a, b in self.apps.items():
+                if b.grant and b.grant.block_id == block_id:
+                    return a
+            return None
+
+    def expired(self, now: Optional[float] = None) -> List[str]:
+        now = now or time.time()
+        with self._lock:
+            return [a for a, b in self.apps.items()
+                    if b.grant and now > b.grant.expires_at
+                    and b.state in (BlockState.APPROVED, BlockState.CONFIRMED,
+                                    BlockState.ACTIVE, BlockState.RUNNING,
+                                    BlockState.DONE)]
+
+    # -------------------------------------------------------------- persist
+    def _persist(self) -> None:
+        if not self.state_path:
+            return
+        snap = {}
+        for app_id, blk in self.apps.items():
+            snap[app_id] = {
+                "user": blk.request.user,
+                "job": blk.request.job_description,
+                "arch": blk.request.arch,
+                "shape": blk.request.shape,
+                "n_chips": blk.request.n_chips,
+                "state": blk.state.value,
+                "block_id": blk.block_id,
+                "coords": blk.grant.coords if blk.grant else None,
+                "expires_at": blk.grant.expires_at if blk.grant else None,
+                "history": blk.history[-20:],
+                "failure": blk.failure_reason,
+            }
+        os.makedirs(os.path.dirname(self.state_path) or ".", exist_ok=True)
+        tmp = self.state_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(snap, f, indent=1, default=str)
+        os.replace(tmp, self.state_path)

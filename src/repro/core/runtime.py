@@ -1,0 +1,181 @@
+"""BlockRuntime — the per-tenant execution engine (the paper's "MPD ring").
+
+Activating a block builds its private sub-mesh over the admin-assigned
+devices, compiles the job's step function with the block's parallelism plan,
+and installs sharded state.  Each block's runtime is fully independent of
+every other block's (separate mesh, separate compiled executables, separate
+checkpoint namespace) — the multi-daemon isolation property of the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.block import BlockGrant
+from repro.data import pipeline
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.serve import serve_step as serve_lib
+from repro.sharding import ctx as shard_ctx
+from repro.sharding import plans
+from repro.train import optimizer as opt_lib
+from repro.train import train_step as train_lib
+
+
+@dataclasses.dataclass
+class JobSpec:
+    cfg: ModelConfig
+    shape: ShapeConfig
+    kind: str = "train"              # train | serve
+    opt: opt_lib.OptConfig = dataclasses.field(default_factory=opt_lib.OptConfig)
+    seed: int = 0
+
+
+class BlockRuntime:
+    def __init__(self, grant: BlockGrant, job: JobSpec,
+                 devices: Sequence[jax.Device], ckpt_root: str):
+        assert len(devices) == int(np.prod(grant.mesh_shape)), (
+            len(devices), grant.mesh_shape)
+        self.grant = grant
+        self.job = job
+        self.devices = list(devices)
+        self.mesh = Mesh(np.asarray(self.devices).reshape(grant.mesh_shape),
+                         ("data", "model"))
+        self.axes = plans.MeshAxes(dp=("data",), model="model")
+        self.ctx = shard_ctx.ShardCtx(self.mesh, ("data",), "model")
+        self.ckpt = CheckpointManager(ckpt_root, namespace=grant.block_id)
+        self.state: Any = None
+        self.cache: Any = None
+        self.step_count = 0
+        self._build()
+
+    # ------------------------------------------------------------ compile
+    def _build(self) -> None:
+        job = self.job
+        if job.kind == "train":
+            state_abs = train_lib.abstract_train_state(job.cfg, job.opt)
+            p_spec = plans.param_specs(state_abs["params"], self.mesh, self.axes)
+            state_spec = {"params": p_spec,
+                          "opt": plans.opt_state_specs(state_abs["opt"], p_spec)}
+            self.state_shardings = plans.to_shardings(state_spec, self.mesh)
+            batch_abs = pipeline.input_specs(job.cfg, job.shape)
+            b_spec = plans.batch_specs(batch_abs, self.mesh, self.axes)
+            self.batch_shardings = plans.to_shardings(b_spec, self.mesh)
+            step = train_lib.make_train_step(job.cfg, job.shape, job.opt)
+
+            def fn(state, batch):
+                with shard_ctx.use(self.ctx):
+                    return step(state, batch)
+
+            self._step = jax.jit(fn, in_shardings=(self.state_shardings,
+                                                   self.batch_shardings),
+                                 out_shardings=(self.state_shardings, None),
+                                 donate_argnums=(0,))
+            self.data = pipeline.DataIterator(job.cfg, job.shape,
+                                              seed=job.seed,
+                                              shardings=self.batch_shardings)
+        else:
+            params_abs = model_lib.abstract_params(job.cfg)
+            p_spec = plans.param_specs(params_abs, self.mesh, self.axes)
+            self.state_shardings = {"params": plans.to_shardings(p_spec,
+                                                                 self.mesh)}
+            dec = serve_lib.make_decode_step(job.cfg)
+
+            def fn(params, token, cache, cache_len):
+                with shard_ctx.use(self.ctx):
+                    return dec(params, token, cache, cache_len)
+
+            self._step = jax.jit(fn, donate_argnums=(2,))
+
+    # --------------------------------------------------------------- state
+    def init_state(self) -> None:
+        job = self.job
+        key = jax.random.PRNGKey(job.seed)
+        if job.kind == "train":
+            init = jax.jit(
+                lambda k: train_lib.make_train_state(job.cfg, k, job.opt),
+                out_shardings=self.state_shardings)
+            self.state = init(key)
+        else:
+            params = jax.jit(
+                lambda k: model_lib.init_params(job.cfg, k),
+                out_shardings=self.state_shardings["params"])(key)
+            cache = model_lib.init_cache(job.cfg, job.shape.global_batch,
+                                         job.shape.seq_len)
+            self.state = {"params": params}
+            self.cache = cache
+            self.cache_len = jnp.int32(0)
+            self.token = jnp.zeros((job.shape.global_batch, 1), jnp.int32)
+
+    # ---------------------------------------------------------------- step
+    def step(self) -> Dict[str, float]:
+        t0 = time.perf_counter()
+        if self.job.kind == "train":
+            batch = self.data.batch(self.step_count)
+            self.state, metrics = self._step(self.state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+        else:
+            self.token, self.cache = self._step(self.state["params"],
+                                                self.token, self.cache,
+                                                self.cache_len)
+            self.cache_len = self.cache_len + 1
+            metrics = {}
+        jax.block_until_ready(jax.tree.leaves(self.state)[0])
+        self.step_count += 1
+        metrics["step_s"] = time.perf_counter() - t0
+        return metrics
+
+    def step_async(self):
+        """Dispatch one step without blocking (async dispatch overlap across
+        blocks on the shared host — the paper's shared-master execution)."""
+        if self.job.kind == "train":
+            batch = self.data.batch(self.step_count)
+            self.state, metrics = self._step(self.state, batch)
+        else:
+            self.token, self.cache = self._step(self.state["params"],
+                                                self.token, self.cache,
+                                                self.cache_len)
+            self.cache_len = self.cache_len + 1
+            metrics = {}
+        self.step_count += 1
+        return metrics
+
+    # ----------------------------------------------------------- persist
+    def save(self, async_: bool = True) -> None:
+        payload = {"state": self.state, "step_count": self.step_count}
+        if async_:
+            self.ckpt.save_async(self.step_count, payload)
+        else:
+            self.ckpt.save(self.step_count, payload)
+
+    def restore(self, step: Optional[int] = None) -> int:
+        like = {"state": self.state, "step_count": self.step_count}
+        shardings = {"state": self.state_shardings
+                     if self.job.kind == "train"
+                     else self.state_shardings, "step_count": None}
+        restored, at = self.ckpt.restore(like, step=step, shardings=shardings)
+        self.state = restored["state"]
+        self.step_count = int(restored["step_count"])
+        return at
+
+    @classmethod
+    def rebuild(cls, old: "BlockRuntime", grant: BlockGrant,
+                devices: Sequence[jax.Device], ckpt_root: str
+                ) -> "BlockRuntime":
+        """Failure migration / elastic resize: new runtime on new devices,
+        state restored from the old block's checkpoints (resharded onto the
+        new mesh by the checkpoint manager)."""
+        rt = cls(grant, old.job, devices, ckpt_root)
+        rt.init_state()
+        old.ckpt.wait()
+        if old.ckpt.latest_step() is not None:
+            rt.ckpt = old.ckpt      # same namespace: adopt checkpoint history
+            rt.restore()
+        return rt

@@ -1,0 +1,136 @@
+"""Pallas TPU flash attention (forward).
+
+Tiled online-softmax attention with GQA-aware index maps: the kernel never
+materializes the (Sq, Sk) score matrix.  Grid = (B*Hq, nq, nk) with the kv
+dim minor-most, so the fp32 (block_q x Dv) accumulator lives in VMEM scratch
+across the kv sweep.  Block shapes are MXU-aligned (multiples of 128 where
+the head dims allow).  Causal masking skips fully-masked kv blocks via
+``pl.when`` (no MXU work issued for the upper triangle).
+
+Validated against ``ref.attention`` in interpret mode on CPU; on real TPUs
+``ops.flash_attention(impl='pallas')`` routes here.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               scale: float, causal: bool, window: int, nk: int,
+               block_q: int, block_k: int, sk: int, q_offset: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    i = pl.program_id(1)
+    q_pos = q_offset + i * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = j * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+
+    # block-level skip: for causal masks, kv blocks strictly above the
+    # diagonal contribute nothing — issue no MXU work for them.
+    first_q_pos = q_offset + i * block_q
+    last_k_pos = j * block_k + block_k - 1
+    live = (first_q_pos + block_q - 1 >= j * block_k) if causal else True
+    if window > 0:
+        live = jnp.logical_and(live, last_k_pos > first_q_pos - window - block_q)
+
+    @pl.when(live if causal or window > 0 else True)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)                   # (bq, D)
+        k = k_ref[0].astype(jnp.float32)                   # (bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale    # (bq, bk)
+        mask = k_pos < sk
+        if causal:
+            mask = jnp.logical_and(mask, q_pos >= k_pos)
+        if window > 0:
+            mask = jnp.logical_and(mask, (q_pos - k_pos) < window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]                                # (bq, 1)
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new) * mask.astype(jnp.float32)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = (acc_scr[...] * corr
+                        + jax.lax.dot_general(
+                            p, v_ref[0].astype(jnp.float32),
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(j == nk - 1)
+    def _fin():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           sliding_window: int = 0,
+                           scale: Optional[float] = None, q_offset: int = 0,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False):
+    """q: (B, Hq, Sq, D); k: (B, Hkv, Sk, D); v: (B, Hkv, Sk, Dv)."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, Dv = v.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    block_q = min(block_q, max(Sq, 8))
+    block_k = min(block_k, max(Sk, 8))
+
+    sq_pad = -(-Sq // block_q) * block_q
+    sk_pad = -(-Sk // block_k) * block_k
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sq_pad - Sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, sk_pad - Sk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, sk_pad - Sk), (0, 0)))
+    qf = qp.reshape(B * Hq, sq_pad, D)
+    kf = kp.reshape(B * Hkv, sk_pad, D)
+    vf = vp.reshape(B * Hkv, sk_pad, Dv)
+
+    nq = sq_pad // block_q
+    nk = sk_pad // block_k
+    grid = (B * Hq, nq, nk)
+
+    def kv_head(bh):
+        return (bh // Hq) * Hkv + (bh % Hq) // G
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=sliding_window,
+        nk=nk, block_q=block_q, block_k=block_k, sk=Sk, q_offset=q_offset)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (kv_head(b), j, 0)),
+            pl.BlockSpec((1, block_k, Dv), lambda b, i, j: (kv_head(b), j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, Dv), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, sq_pad, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, Hq, sq_pad, Dv)[:, :, :Sq]

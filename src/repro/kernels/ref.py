@@ -1,0 +1,134 @@
+"""Pure-jnp reference oracles for every kernel.
+
+These are the semantic ground truth: naive, O(S^2)-memory, numerically
+straightforward.  Tests assert the Pallas kernels (interpret mode) and the
+chunked jnp production paths in ``ops.py`` against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def attention(q, k, v, *, causal: bool = True, sliding_window: int = 0,
+              scale: float | None = None, q_offset: int = 0):
+    """Naive multi-head attention with GQA.
+
+    q: (B, Hq, Sq, D);  k: (B, Hkv, Sk, D);  v: (B, Hkv, Sk, Dv)
+    ``q_offset``: absolute position of q[0] (for decode: q_offset = cache_len).
+    Returns (B, Hq, Sq, Dv).
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    Sk = k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, Sq, D)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * scale
+    q_pos = q_offset + jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), dtype=bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if sliding_window > 0:
+        mask &= (q_pos - k_pos) < sliding_window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, Sq, -1).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, *, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD scan
+# ---------------------------------------------------------------------------
+
+def ssd_scan(x, dt, A, B, C, D, *, h0=None):
+    """Sequential (ground-truth) Mamba2 recurrence.
+
+    x:  (Bt, S, H, P)   inputs per head
+    dt: (Bt, S, H)      softplus'd timestep (>0)
+    A:  (H,)            negative decay rate
+    B:  (Bt, S, N)      input projection (n_groups=1, shared across heads)
+    C:  (Bt, S, N)      output projection
+    D:  (H,)            skip
+    h0: (Bt, H, P, N) or None
+    Returns y (Bt, S, H, P), h_final (Bt, H, P, N).
+    """
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf = B.astype(jnp.float32), C.astype(jnp.float32)
+    h = jnp.zeros((Bt, H, P, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp          # (Bt,H,P), (Bt,H), (Bt,N), (Bt,N)
+        decay = jnp.exp(dt_t * A[None])    # (Bt,H)
+        dBx = jnp.einsum("bh,bn,bhp->bhpn", dt_t, B_t, x_t)
+        h = h * decay[..., None, None] + dBx
+        y = jnp.einsum("bn,bhpn->bhp", C_t, h)
+        return h, y
+
+    h, ys = jax.lax.scan(
+        step, h,
+        (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+         jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1) + xf * D[None, None, :, None]
+    return y.astype(x.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix memory) scan
+# ---------------------------------------------------------------------------
+
+def mlstm_scan(q, k, v, i_gate, f_gate, *, c0=None, n0=None, m0=None):
+    """Sequential (ground-truth) mLSTM recurrence with log-domain stabilization.
+
+    q,k: (B, H, S, Dk); v: (B, H, S, Dv); i_gate,f_gate: (B, H, S) pre-activations.
+    C_t = f C_{t-1} + i v k^T;  n_t = f n + i k;  h = (C q) / max(|n.q|, 1)
+    Stabilized with m_t = max(log f + m_{t-1}, log i).
+    Returns h (B,H,S,Dv) and final (C, n, m).
+    """
+    B, H, S, Dk = q.shape
+    Dv = v.shape[-1]
+    scale = 1.0 / np.sqrt(Dk)
+    C = jnp.zeros((B, H, Dk, Dv), jnp.float32) if c0 is None else c0.astype(jnp.float32)
+    n = jnp.zeros((B, H, Dk), jnp.float32) if n0 is None else n0.astype(jnp.float32)
+    m = jnp.full((B, H), -jnp.inf, jnp.float32) if m0 is None else m0.astype(jnp.float32)
+
+    def step(carry, inp):
+        C, n, m = carry
+        q_t, k_t, v_t, i_t, f_t = inp
+        logf = jax.nn.log_sigmoid(f_t)               # (B,H)
+        m_new = jnp.maximum(logf + m, i_t)
+        fg = jnp.exp(logf + m - m_new)
+        ig = jnp.exp(i_t - m_new)
+        C = C * fg[..., None, None] + ig[..., None, None] * (k_t[..., :, None] * v_t[..., None, :])
+        n = n * fg[..., None] + ig[..., None] * k_t
+        num = jnp.einsum("bhkv,bhk->bhv", C, q_t) * scale
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q_t)) * scale,
+                          jnp.exp(-m_new))
+        return (C, n, m_new), num / den[..., None]
+
+    qs = jnp.moveaxis(q.astype(jnp.float32), 2, 0)
+    ks = jnp.moveaxis(k.astype(jnp.float32), 2, 0)
+    vs = jnp.moveaxis(v.astype(jnp.float32), 2, 0)
+    igs = jnp.moveaxis(i_gate.astype(jnp.float32), 2, 0)
+    fgs = jnp.moveaxis(f_gate.astype(jnp.float32), 2, 0)
+    (C, n, m), hs = jax.lax.scan(step, (C, n, m), (qs, ks, vs, igs, fgs))
+    return jnp.moveaxis(hs, 0, 2).astype(q.dtype), (C, n, m)

@@ -1,0 +1,53 @@
+"""Pallas TPU fused RMSNorm.
+
+One VMEM pass per row block: fp32 mean-of-squares, rsqrt, scale — no
+intermediate HBM round-trip between the variance reduction and the scaling
+(XLA emits two kernels for the naive jnp formulation on some backends).
+Rows are tiled in blocks of 256; the feature dim stays whole in VMEM
+(d_model <= ~8k fits comfortably: 8k fp32 = 32 KB/row).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float, n_rows: int,
+                    block_rows: int):
+    i = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)                 # (block_rows, d)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * s_ref[...].astype(jnp.float32)
+    # mask padded rows (beyond n_rows) — harmless garbage, sliced off outside
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def rmsnorm_pallas(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
+                   interpret: bool = False):
+    """x: (..., d); scale: (d,)."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    rows = int(np.prod(orig_shape[:-1])) if len(orig_shape) > 1 else 1
+    xf = x.reshape(rows, d)
+    block_rows = min(block_rows, max(rows, 1))
+    rows_pad = -(-rows // block_rows) * block_rows
+    xf = jnp.pad(xf, ((0, rows_pad - rows), (0, 0)))
+    grid = (rows_pad // block_rows,)
+    kernel = functools.partial(_rmsnorm_kernel, eps=eps, n_rows=rows,
+                               block_rows=block_rows)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows_pad, d), x.dtype),
+        interpret=interpret,
+    )(xf, scale)
+    return out[:rows].reshape(orig_shape)

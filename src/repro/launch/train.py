@@ -1,0 +1,120 @@
+"""End-to-end training driver (single block, real execution).
+
+Runs a reduced or full architecture config for N steps on the available
+devices with the production plan machinery: sharded state, synthetic data
+pipeline, async checkpointing, monitoring.  Used by the examples and the
+~100M-scale end-to-end run in EXPERIMENTS.md.
+
+  PYTHONPATH=src python -m repro.launch.train --arch xlstm_350m --steps 200 \
+      --seq-len 256 --global-batch 8 --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as configs
+from repro.checkpoint.manager import CheckpointManager
+from repro.data import pipeline
+from repro.models import model as model_lib
+from repro.models.config import ShapeConfig
+from repro.sharding import ctx as shard_ctx
+from repro.sharding import plans
+from repro.train import optimizer as opt_lib
+from repro.train import train_step as train_lib
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = (configs.get_smoke(args.arch) if args.smoke
+           else configs.get(args.arch))
+    shape = ShapeConfig("cli", "train", seq_len=args.seq_len,
+                        global_batch=args.global_batch,
+                        microbatch=args.microbatch)
+    opt_cfg = opt_lib.OptConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+                                total_steps=args.steps)
+
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev, 1), ("data", "model")) if n_dev > 1 else \
+        jax.make_mesh((1, 1), ("data", "model"))
+    axes = plans.MeshAxes(dp=("data",), model="model")
+    ctx = shard_ctx.ShardCtx(mesh, ("data",), "model")
+
+    state_abs = train_lib.abstract_train_state(cfg, opt_cfg)
+    p_spec = plans.param_specs(state_abs["params"], mesh, axes)
+    state_spec = {"params": p_spec,
+                  "opt": plans.opt_state_specs(state_abs["opt"], p_spec)}
+    state_sh = plans.to_shardings(state_spec, mesh)
+    batch_abs = pipeline.input_specs(cfg, shape)
+    batch_sh = plans.to_shardings(
+        plans.batch_specs(batch_abs, mesh, axes), mesh)
+
+    step_fn = train_lib.make_train_step(cfg, shape, opt_cfg)
+
+    def fn(state, batch):
+        with shard_ctx.use(ctx):
+            return step_fn(state, batch)
+
+    jstep = jax.jit(fn, in_shardings=(state_sh, batch_sh),
+                    out_shardings=(state_sh, None), donate_argnums=(0,))
+    init = jax.jit(lambda k: train_lib.make_train_state(cfg, k, opt_cfg),
+                   out_shardings=state_sh)
+    state = init(jax.random.PRNGKey(args.seed))
+    n_params = model_lib.count_params(state["params"])
+    print(f"# arch={cfg.name} params={n_params/1e6:.2f}M devices={n_dev} "
+          f"tokens/step={shape.global_batch * shape.seq_len}")
+
+    ckpt = None
+    start_step = 0
+    if args.ckpt_dir:
+        ckpt = CheckpointManager(args.ckpt_dir, namespace=cfg.name)
+        if args.resume and ckpt.latest_step() is not None:
+            state, start_step = ckpt.restore(state, shardings=state_sh)
+            print(f"# resumed from step {start_step}")
+
+    data = pipeline.DataIterator(cfg, shape, seed=args.seed,
+                                 shardings=batch_sh)
+    losses = []
+    t_start = time.time()
+    for step in range(start_step, args.steps):
+        batch = data.batch(step)
+        state, metrics = jstep(state, batch)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            print(f"step {step:5d} loss {loss:8.4f} "
+                  f"gnorm {float(metrics['grad_norm']):8.3f} "
+                  f"lr {float(metrics['lr']):.2e}", flush=True)
+        if ckpt and args.ckpt_every and (step + 1) % args.ckpt_every == 0:
+            ckpt.save_async(step + 1, state)
+    if ckpt:
+        ckpt.wait()
+    wall = time.time() - t_start
+    tok_s = (args.steps - start_step) * shape.global_batch * shape.seq_len / wall
+    print(f"# done: {wall:.1f}s, {tok_s:.0f} tok/s, "
+          f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,116 @@
+"""Model facade: the public API the runtime layers (train/serve) consume.
+
+  init_params(cfg, key)                  -> params pytree
+  abstract_params(cfg)                   -> ShapeDtypeStruct pytree (no alloc)
+  loss_fn(params, cfg, batch)            -> (loss, metrics)
+  prefill(params, cfg, batch, cache)     -> (logits_last, filled_cache)
+  decode_step(params, cfg, token, cache, cache_len) -> (logits, new_cache)
+  init_cache(cfg, batch, smax)           -> cache pytree
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.models.transformer import embed_inputs, forward, init_cache  # re-export
+
+init_params = transformer.init_params
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda k: transformer.init_params(cfg, k),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree))
+
+
+def count_active_params(cfg: ModelConfig) -> int:
+    """Params touched per token: full count minus inactive routed experts."""
+    total = count_params(abstract_params(cfg))
+    if cfg.moe is None:
+        return total
+    m = cfg.moe
+    per_expert = 3 * cfg.d_model * m.d_ff_expert
+    n_moe_layers = transformer.n_groups(cfg)   # one moe sublayer per group
+    inactive = n_moe_layers * (m.n_experts - m.top_k) * per_expert
+    return total - inactive
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def _xent(logits, labels, mask):
+    """Cross-entropy in fp32 with a validity mask.  logits: (B,S,V)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return nll.sum() / denom
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, Any]
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    x = embed_inputs(params, cfg, batch)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.arange(S)
+    logits, aux, _ = forward(params, cfg, x, positions=positions)
+
+    if cfg.frontend == "frame":
+        # masked-prediction (HuBERT-style): loss only on masked frames
+        labels = batch["labels"]
+        mask = batch["mask"].astype(jnp.float32)
+        loss = _xent(logits, labels, mask)
+    elif cfg.frontend == "patch":
+        # next-token on the text segment only (patches occupy the prefix)
+        n_p = batch["patches"].shape[1]
+        labels = batch["labels"]                       # (B, S_text)
+        text_logits = logits[:, n_p:]
+        loss = _next_token_loss(text_logits, labels)
+    else:
+        loss = _next_token_loss(logits, batch["labels"])
+    total = loss + aux
+    return total, {"loss": loss, "aux_loss": aux}
+
+
+def _next_token_loss(logits, labels):
+    """Standard causal LM loss: logits[t] predicts labels[t]."""
+    mask = jnp.ones(labels.shape, jnp.float32)
+    return _xent(logits, labels, mask)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, Any], cache):
+    """Run the prompt through the stack, filling ``cache``.
+
+    Returns (logits_last (B, V), cache)."""
+    x = embed_inputs(params, cfg, batch)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    logits, _, new_cache = forward(params, cfg, x, positions=positions,
+                                   cache=cache, cache_len=jnp.int32(0))
+    return logits[:, -1], new_cache
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, cache_len):
+    """One autoregressive step.  token: (B, 1) int32; cache_len: scalar int32.
+
+    Returns (logits (B, V), new_cache)."""
+    x = embed_inputs(params, cfg, {"tokens": token})
+    positions = cache_len + jnp.arange(1)
+    logits, _, new_cache = forward(params, cfg, x, positions=positions,
+                                   cache=cache, cache_len=cache_len)
+    return logits[:, -1], new_cache

@@ -1,0 +1,37 @@
+"""Serving step factories: batched prefill and single-token decode.
+
+``decode_32k`` / ``long_500k`` assignment cells lower ``serve_step`` — one new
+token against a KV/recurrent cache of ``shape.seq_len`` tokens.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig, ShapeConfig
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch, cache):
+        return model_lib.prefill(params, cfg, batch, cache)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, *, sample: bool = False,
+                     temperature: float = 1.0):
+    def decode_step(params, token, cache, cache_len, key=None):
+        logits, new_cache = model_lib.decode_step(params, cfg, token, cache,
+                                                  cache_len)
+        if sample:
+            nxt = jax.random.categorical(key, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt.astype(jnp.int32)[:, None], new_cache
+    return decode_step
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, smax: int):
+    return jax.eval_shape(lambda: model_lib.init_cache(cfg, batch, smax))

@@ -1,0 +1,117 @@
+"""Activation-sharding context.
+
+Model code is mesh-agnostic; the runtime installs a ``ShardCtx`` around
+lowering/execution and the model calls the ``constrain_*`` helpers, which
+no-op when no context is installed (single-device tests).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+class ShardCtx:
+    def __init__(self, mesh: Mesh, dp_axes: Tuple[str, ...], model_axis: str,
+                 seq_axis: Optional[str] = None, tp: bool = True):
+        self.mesh = mesh
+        self.dp = dp_axes
+        self.model = model_axis
+        self.seq_axis = seq_axis  # axis used to shard sequence when batch==1
+        self.tp = tp              # False: model axis folded into dp (no TP)
+
+    def sharding(self, *spec) -> NamedSharding:
+        return NamedSharding(self.mesh, P(*spec))
+
+
+def current() -> Optional[ShardCtx]:
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def use(ctx: Optional[ShardCtx]):
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = ctx
+    try:
+        yield ctx
+    finally:
+        _STATE.ctx = prev
+
+
+def _constrain(x, *spec):
+    ctx = current()
+    if ctx is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, ctx.sharding(*spec))
+
+
+def constrain_tokens_3d(x):
+    """(B, S, d) residual-stream activations: batch over dp."""
+    ctx = current()
+    if ctx is None:
+        return x
+    if x.shape[0] % _dp_size(ctx) == 0:
+        return _constrain(x, ctx.dp, None, None)
+    if ctx.seq_axis and x.shape[1] % ctx.mesh.shape[ctx.seq_axis] == 0:
+        return _constrain(x, None, ctx.seq_axis, None)
+    return x
+
+
+def constrain_experts(x):
+    """(E, C, d) expert buffers: experts over the model axis (EP)."""
+    ctx = current()
+    if ctx is None or not ctx.tp:
+        return x
+    if x.shape[0] % ctx.mesh.shape[ctx.model] == 0:
+        return _constrain(x, ctx.model, None, None)
+    return x
+
+
+def constrain_logits(x):
+    """(B, S, V) logits: batch over dp, vocab over model."""
+    ctx = current()
+    if ctx is None:
+        return x
+    v_ok = ctx.tp and x.shape[-1] % ctx.mesh.shape[ctx.model] == 0
+    b_ok = x.shape[0] % _dp_size(ctx) == 0
+    return _constrain(x, ctx.dp if b_ok else None, None,
+                      ctx.model if v_ok else None)
+
+
+def _dp_size(ctx: ShardCtx) -> int:
+    n = 1
+    for a in ctx.dp:
+        n *= ctx.mesh.shape[a]
+    return n
+
+
+def dp_size() -> int:
+    """Data-parallel world size (1 when no sharding context installed)."""
+    ctx = current()
+    return _dp_size(ctx) if ctx is not None else 1
+
+
+def constrain_moe_shards(x):
+    """(DP, Tl, ...) per-shard routing tensors: leading dim over dp."""
+    ctx = current()
+    if ctx is None or x.shape[0] % _dp_size(ctx) != 0:
+        return x
+    return _constrain(x, ctx.dp, *([None] * (x.ndim - 1)))
+
+
+def constrain_expert_buffers(x):
+    """(DP, E, C, d) expert buffers: shards over dp, experts over model —
+    the reshard between these two is the EP all-to-all."""
+    ctx = current()
+    if ctx is None:
+        return x
+    dp_ok = x.shape[0] % _dp_size(ctx) == 0
+    e_ok = ctx.tp and x.shape[1] % ctx.mesh.shape[ctx.model] == 0
+    return _constrain(x, ctx.dp if dp_ok else None,
+                      ctx.model if e_ok else None,
+                      *([None] * (x.ndim - 2)))

@@ -1,0 +1,244 @@
+"""Partition-spec plans: map param/batch/cache pytrees to PartitionSpecs.
+
+Axis roles:
+  dp axes   ("pod","data") or ("data",) — data parallel + FSDP (ZeRO-3)
+  model     "model"                     — TP (heads/ff/vocab) + EP (experts)
+
+Rules are keyed on leaf *names* (unique across the model substrate) with the
+base (unstacked) spec; leading scan-stack dims get ``None``.  A dim is only
+sharded if divisible by the axis size — otherwise it is replicated, which
+avoids GSPMD padding waste on e.g. 40 heads / 16-way TP (the projections
+shard on the fused ``H*hd`` dim instead, which is always divisible).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    dp: Tuple[str, ...]          # e.g. ("pod", "data") or ("data",)
+    model: str                   # "model"
+
+    @staticmethod
+    def from_mesh(mesh: Mesh) -> "MeshAxes":
+        names = tuple(mesh.axis_names)
+        assert "model" in names, names
+        dp = tuple(n for n in names if n != "model")
+        return MeshAxes(dp=dp, model="model")
+
+
+# base spec per leaf name: tuple of roles, one per base dim.
+#   "fsdp"  -> sharded over dp axes (ZeRO-3 param shard)
+#   "model" -> sharded over model axis (TP / EP / vocab)
+#   None    -> replicated
+# (name, ndim_base): spec
+_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    # embeddings / heads
+    "embed": ("model", "fsdp"),
+    "lm_head": ("fsdp", "model"),
+    "frame_proj": (None, "fsdp"),
+    "patch_proj": (None, "fsdp"),
+    "mask_embed": (None,),
+    # attention (dense / GQA)
+    "wq": ("fsdp", "model"),
+    "wk": ("fsdp", "model"),
+    "wv": ("fsdp", "model"),
+    "wo": ("model", "fsdp"),
+    # MLA (lora ranks kept replicated; fused head dims column-parallel)
+    "wq_a": ("fsdp", None),
+    "wq_b": ("fsdp", "model"),
+    "wkv_a": ("fsdp", None),
+    "wk_b": ("fsdp", "model"),
+    "wv_b": ("fsdp", "model"),
+    "q_norm": (None,),
+    "kv_norm": (None,),
+    # MLP
+    "w_up": ("fsdp", "model"),
+    "w_gate": ("fsdp", "model"),
+    "w_down": ("model", "fsdp"),
+    # MoE (3D expert weights; detected by ndim)
+    "router": ("fsdp", None),
+    # mamba2
+    "w_in": ("fsdp", "model"),
+    "conv_w": (None, "model"),
+    "A_log": (None,),
+    "D": (None,),
+    "dt_bias": (None,),
+    "norm": ("model",),
+    "w_out": ("model", "fsdp"),
+    # xlstm
+    "w_if": ("fsdp", None),
+    "r_gates": (None, None, None),
+    "w_gates": ("fsdp", "model"),
+    "w_ff_gate": ("fsdp", "model"),
+    "w_ff_up": ("fsdp", "model"),
+    "w_ff_down": ("model", "fsdp"),
+    "out_norm": ("model",),
+    # norms
+    "scale": (None,),
+    "bias": (None,),
+}
+
+_MOE_EXPERT_RULES = {           # (E, d, ff) / (E, ff, d): EP over model
+    "w_up": ("model", "fsdp", None),
+    "w_gate": ("model", "fsdp", None),
+    "w_down": ("model", None, "fsdp"),
+}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return entry.key
+    return ""
+
+
+def _roles_to_spec(roles, shape, axes: MeshAxes, mesh: Mesh,
+                   no_tp: bool = False) -> P:
+    """Resolve role names to mesh axes, honoring divisibility.  With
+    ``no_tp`` the model axis is folded into dp (small models: pure ZeRO-3
+    data parallelism, no tensor parallelism)."""
+    dp_size = int(np.prod([mesh.shape[a] for a in axes.dp]))
+    spec = []
+    for role, dim in zip(roles, shape):
+        if no_tp and role == "model":
+            role = None
+        if role == "fsdp" and dim % dp_size == 0:
+            spec.append(axes.dp if len(axes.dp) > 1 else axes.dp[0])
+        elif role == "model" and dim % mesh.shape[axes.model] == 0:
+            spec.append(axes.model)
+        else:
+            spec.append(None)
+    return P(*spec)
+
+
+def param_specs(params_abstract, mesh: Mesh, axes: Optional[MeshAxes] = None,
+                no_tp: bool = False):
+    """PartitionSpec pytree mirroring ``params_abstract`` (shapes only)."""
+    axes = axes or MeshAxes.from_mesh(mesh)
+
+    def spec_for(path, leaf):
+        name = _leaf_name(path)
+        ndim = len(leaf.shape)
+        rules = _RULES
+        if name in _MOE_EXPERT_RULES:
+            # distinguish MoE expert weights (base ndim 3) from MLP (base 2):
+            # under the "moe"/"shared" context both exist; use trailing-dims fit
+            base3 = _MOE_EXPERT_RULES[name]
+            # expert weights always sit under a dict that also holds "router";
+            # cheaper: try base-3 if the leaf has >=3 dims and the last three
+            # dims include the expert count (first of the three > 1) — we
+            # instead check the path for a "moe" ancestor without "shared".
+            keys = [e.key for e in path if isinstance(e, jax.tree_util.DictKey)]
+            if "moe" in keys and "shared" not in keys:
+                roles = base3
+                stack = ndim - 3
+                return P(*((None,) * stack), *_roles_to_spec(
+                    roles, leaf.shape[stack:], axes, mesh, no_tp))
+        roles = rules.get(name)
+        if roles is None:
+            return P()
+        stack = ndim - len(roles)
+        if stack < 0:
+            return P()
+        return P(*((None,) * stack),
+                 *_roles_to_spec(roles, leaf.shape[stack:], axes, mesh, no_tp))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_abstract)
+
+
+def batch_specs(batch_abstract, mesh: Mesh, axes: Optional[MeshAxes] = None):
+    """Shard every batch leaf on its leading (global-batch) dim over dp."""
+    axes = axes or MeshAxes.from_mesh(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in axes.dp]))
+    dp = axes.dp if len(axes.dp) > 1 else axes.dp[0]
+
+    def spec_for(leaf):
+        if leaf.shape and leaf.shape[0] % dp_size == 0:
+            return P(dp, *([None] * (len(leaf.shape) - 1)))
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree.map(spec_for, batch_abstract)
+
+
+def cache_specs(cache_abstract, cfg: ModelConfig, mesh: Mesh,
+                axes: Optional[MeshAxes] = None, batch_size: int = 0):
+    """KV/state caches: batch over dp when divisible, else sequence over dp
+    (long-context B=1 decode); kv-heads/channels over model when divisible.
+
+    Cache leaves all carry a leading (n_groups[, n_sub]) stack; the batch dim
+    is located per leaf name.
+    """
+    axes = axes or MeshAxes.from_mesh(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in axes.dp]))
+    model_size = mesh.shape[axes.model]
+    dp = axes.dp if len(axes.dp) > 1 else axes.dp[0]
+
+    # per leaf name: (batch_dim_from_end, seq_dim_from_end or None,
+    #                 model_dim_from_end or None)
+    layout = {
+        "k": (4, 3, 2), "v": (4, 3, 2),            # (..., B, S, Hkv, D)
+        "c_kv": (3, 2, None), "k_rope": (3, 2, None),   # (..., B, S, R)
+        "conv": (3, None, 1),                      # (..., B, W-1, C)
+        "ssm": (4, None, 3),                       # (..., B, H, P, N)
+    }
+
+    def spec_for(path, leaf):
+        name = _leaf_name(path)
+        nd = len(leaf.shape)
+        spec = [None] * nd
+        lay = layout.get(name)
+        if lay is None:
+            # xlstm/slstm tuple states: batch is dim -3 or -2... they are
+            # small; shard batch dim if any dim == batch_size and divisible.
+            for i, d in enumerate(leaf.shape):
+                if batch_size and d == batch_size and d % dp_size == 0:
+                    spec[i] = dp
+                    break
+            return P(*spec)
+        b_i, s_i, m_i = lay
+        if b_i is not None and nd - b_i >= 0 and leaf.shape[nd - b_i] % dp_size == 0:
+            spec[nd - b_i] = dp
+        elif s_i is not None and leaf.shape[nd - s_i] % dp_size == 0:
+            spec[nd - s_i] = dp    # sequence-shard the cache (B==1 long ctx)
+        if m_i is not None and leaf.shape[nd - m_i] % model_size == 0:
+            spec[nd - m_i] = axes.model
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_abstract)
+
+
+def opt_state_specs(opt_abstract, param_spec_tree):
+    """Specs for an optimizer-state tree: m/v mirror their params; int8
+    quantized states {"q","s"} give q the param spec and s the param spec
+    with the (blocked) last dim replicated."""
+    is_q = lambda x: isinstance(x, dict) and set(x.keys()) == {"q", "s"}
+
+    def moment_spec(mleaf, pspec):
+        if is_q(mleaf):
+            nd = len(mleaf["q"].shape)
+            entries = list(pspec) + [None] * (nd - len(list(pspec)))
+            s_spec = P(*entries[:-1], None) if nd else P()
+            return {"q": pspec, "s": s_spec}
+        return pspec
+
+    def tree_for(moments):
+        return jax.tree.map(moment_spec, moments, param_spec_tree,
+                            is_leaf=is_q)
+
+    return {"m": tree_for(opt_abstract["m"]),
+            "v": tree_for(opt_abstract["v"]),
+            "step": P()}
+
+
+def to_shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,109 @@
+"""AdamW over bf16 params with fp32 *or* block-quantized int8 moments,
+global-norm clipping, warmup+cosine schedule, and optional per-layer scanned
+updates (bounds optimizer temp memory to one layer-slice at a time).
+
+States are sharded exactly like their params (ZeRO-3 when the plan FSDPs
+params); with ``state_bits=8`` the m/v trees hold {"q": int8, "s": f32}
+leaves (see ``quantized_state``), cutting optimizer HBM 4x — required to fit
+the 400B-class MoE cells on a single 256-chip v5e pod.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import quantized_state as qs
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    state_bits: Optional[int] = None     # None = fp32 moments; 8 = int8
+    scan_stacked: bool = True            # lax.map update over layer stacks
+    scan_min_ndim: int = 3               # leaves with >= this many dims scan
+
+
+def schedule(cfg: OptConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * cos
+
+
+def init(params, cfg: Optional[OptConfig] = None) -> Dict[str, Any]:
+    cfg = cfg or OptConfig()
+    if cfg.state_bits == 8:
+        zeros = lambda p: qs.zeros_like_quantized(p)
+    else:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    make = lambda: jax.tree.map(zeros, params)
+    return {"m": make(), "v": make(), "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(l.astype(jnp.float32) ** 2) for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def _adam_leaf(cfg: OptConfig, lr, scale, bc1, bc2, p, g, m, v):
+    """One leaf's update in fp32; m/v enter/leave in storage format."""
+    g = g.astype(jnp.float32) * scale
+    m_f = qs.dequantize(m) if cfg.state_bits == 8 else m
+    v_f = qs.dequantize(v) if cfg.state_bits == 8 else v
+    m_f = cfg.b1 * m_f + (1 - cfg.b1) * g
+    v_f = cfg.b2 * v_f + (1 - cfg.b2) * g * g
+    delta = (m_f / bc1) / (jnp.sqrt(v_f / bc2) + cfg.eps)
+    if p.ndim >= 2:     # decoupled weight decay on matrices only
+        delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+    new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+    if cfg.state_bits == 8:
+        return new_p, qs.quantize(m_f), qs.quantize(v_f)
+    return new_p, m_f, v_f
+
+
+def apply(cfg: OptConfig, params, opt_state, grads
+          ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    step = opt_state["step"] + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    upd = functools.partial(_adam_leaf, cfg, lr, scale, bc1, bc2)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    is_state_leaf = (lambda x: isinstance(x, dict) and "q" in x) \
+        if cfg.state_bits == 8 else None
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"], is_leaf=is_state_leaf)
+    flat_v = jax.tree.leaves(opt_state["v"], is_leaf=is_state_leaf)
+
+    out = []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        if (cfg.scan_stacked and p.ndim >= cfg.scan_min_ndim
+                and p.shape[0] <= 64 and p.size // max(p.shape[0], 1) >= 2 ** 16):
+            # scan the update over the leading (layer-stack) dim: optimizer
+            # temps hold one layer slice, not the whole stacked tensor
+            new_p, new_m, new_v = jax.lax.map(
+                lambda pgmv: upd(*pgmv), (p, g, m, v))
+        else:
+            new_p, new_m, new_v = upd(p, g, m, v)
+        out.append((new_p, new_m, new_v))
+
+    unflat = lambda i: jax.tree.unflatten(treedef, [o[i] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return unflat(0), {"m": unflat(1), "v": unflat(2), "step": step}, metrics

@@ -1,0 +1,55 @@
+"""Block-wise int8 quantization for optimizer state (8-bit Adam).
+
+m and v are stored as int8 codes with fp32 absmax scales per 256-element
+block along the last dim (bitsandbytes-style).  This cuts optimizer-state
+HBM 4x — the difference between a 400B-param model fitting a 256-chip v5e
+pod or not (see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_to_block(x):
+    last = x.shape[-1]
+    pad = (-last) % BLOCK
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x, pad
+
+
+def quantize(x) -> Dict[str, jax.Array]:
+    """x: fp array -> {"q": int8 same shape, "s": f32 (..., nblocks)}."""
+    xf = x.astype(jnp.float32)
+    orig_last = xf.shape[-1]
+    xp, pad = _pad_to_block(xf)
+    nb = xp.shape[-1] // BLOCK
+    blocks = xp.reshape(*xp.shape[:-1], nb, BLOCK)
+    amax = jnp.max(jnp.abs(blocks), axis=-1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(blocks / scale[..., None]), -127, 127).astype(jnp.int8)
+    q = q.reshape(*xp.shape)[..., :orig_last]
+    return {"q": q, "s": scale}
+
+
+def dequantize(state: Dict[str, jax.Array]) -> jax.Array:
+    q, s = state["q"], state["s"]
+    orig_last = q.shape[-1]
+    qp, pad = _pad_to_block(q.astype(jnp.float32))
+    nb = qp.shape[-1] // BLOCK
+    blocks = qp.reshape(*qp.shape[:-1], nb, BLOCK)
+    x = blocks * s[..., None]
+    return x.reshape(*qp.shape)[..., :orig_last]
+
+
+def zeros_like_quantized(p) -> Dict[str, jax.Array]:
+    last = p.shape[-1] if p.ndim else 1
+    nb = -(-last // BLOCK)
+    shape = p.shape if p.ndim else (1,)
+    return {"q": jnp.zeros(shape, jnp.int8),
+            "s": jnp.ones((*shape[:-1], nb), jnp.float32)}

@@ -1,0 +1,95 @@
+"""Train-step factory: grad-accumulation microbatch scan + remat + AdamW.
+
+The returned ``train_step(state, batch) -> (state, metrics)`` is pjit-ready:
+call sites wrap it in ``jax.jit`` with in/out shardings from the plan.  One
+optimizer update per call; gradients average over ``shape.microbatch``
+sequential microbatches (single implicit dp all-reduce, amortized).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.train import optimizer as opt_lib
+
+
+def make_train_state(cfg: ModelConfig, key, opt_cfg: opt_lib.OptConfig):
+    params = model_lib.init_params(cfg, key)
+    return {"params": params, "opt": opt_lib.init(params, opt_cfg)}
+
+
+def abstract_train_state(cfg: ModelConfig, opt_cfg: opt_lib.OptConfig):
+    params = model_lib.abstract_params(cfg)
+    opt = jax.eval_shape(lambda p: opt_lib.init(p, opt_cfg), params)
+    return {"params": params, "opt": opt}
+
+
+def _split_micro(batch, n_micro: int):
+    """(G, ...) -> (n_micro, G/n_micro, ...) for every leaf."""
+    def split(x):
+        g = x.shape[0]
+        assert g % n_micro == 0, (g, n_micro)
+        return x.reshape(n_micro, g // n_micro, *x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(cfg: ModelConfig, shape: ShapeConfig,
+                    opt_cfg: opt_lib.OptConfig, *, accum: str = "f32"):
+    """``accum``: gradient-accumulator dtype policy across microbatches.
+    "f32" — always fp32 (default); "mixed" — bf16 for large leaves
+    (>= 4M elements; the MoE expert stacks), fp32 for the rest.  Mixed halves
+    accumulator HBM on 100B+-param models at a ~3-bit accumulation-precision
+    cost over 8 microbatches.
+    """
+    n_micro = max(1, shape.microbatch)
+
+    def _accum_dtype(p):
+        if accum == "mixed" and p.size >= (1 << 22):
+            return jnp.bfloat16
+        return jnp.float32
+
+    def loss_of(params, mb):
+        loss, metrics = model_lib.loss_fn(params, cfg, mb)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if n_micro == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            micro = _split_micro(batch, n_micro)
+
+            def acc_step(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, _accum_dtype(p)), params)
+            (grads, loss), _ = jax.lax.scan(acc_step, (g0, jnp.zeros(())), micro)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32) / n_micro,
+                                 grads)
+            loss = loss / n_micro
+            metrics = {}
+        new_params, new_opt, opt_metrics = opt_lib.apply(
+            opt_cfg, params, state["opt"], grads)
+        out_metrics = {"loss": loss, **opt_metrics}
+        return {"params": new_params, "opt": new_opt}, out_metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params, batch):
+        loss, metrics = model_lib.loss_fn(params, cfg, batch)
+        return {"loss": loss, **metrics}
+    return eval_step

@@ -1,0 +1,21 @@
+"""Shared test fixtures.  NOTE: no XLA_FLAGS device-count override here —
+unit tests see the real single CPU device; multi-device behaviour is tested
+via subprocesses (test_multidevice.py) per the dry-run isolation rule.
+"""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

@@ -1,0 +1,190 @@
+"""Core multi-block system: topology, partitioner (hypothesis invariants),
+lifecycle state machine, interference model, monitor."""
+import time
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import interference
+from repro.core.block import Block, BlockGrant, BlockRequest, BlockState
+from repro.core.monitor import Monitor
+from repro.core.partition import AllocationError, Partitioner, mesh_shape_for
+from repro.core.registry import Registry
+from repro.core.topology import Topology, min_bisection_links, rect_coords
+
+
+# ---------------------------------------------------------------- topology
+
+def test_topology_links_count():
+    t = Topology(n_pods=1, pod_x=4, pod_y=4, wrap=True)
+    # 2D torus: 2 links per chip dim -> 2 * n links total
+    assert len(t.links()) == 2 * 16
+
+
+def test_route_is_neighbor_path():
+    t = Topology(n_pods=1, pod_x=8, pod_y=8)
+    links = t.route((0, 1, 1), (0, 4, 6))
+    # torus distance: min over wraparound
+    assert len(links) == min(3, 5) + min(5, 3)
+    for a, b in links:
+        assert b in t.neighbors(a) or a in t.neighbors(b)
+
+
+def test_rect_bisection():
+    t = Topology(n_pods=1, pod_x=8, pod_y=8)
+    coords = rect_coords(0, 0, 0, 4, 4)
+    # cutting a 4x4 grid in half crosses 4 mesh links
+    assert min_bisection_links(coords, t) == 4
+
+
+# -------------------------------------------------------------- partitioner
+
+@given(sizes=st.lists(st.sampled_from([1, 2, 4, 8, 16]), min_size=1,
+                      max_size=6))
+@settings(max_examples=40, deadline=None)
+def test_partitioner_disjoint_invariant(sizes):
+    """Hypothesis: any sequence of allocations yields disjoint contiguous
+    rectangles; releasing everything frees every chip."""
+    topo = Topology(n_pods=1, pod_x=8, pod_y=8)
+    part = Partitioner(topo)
+    allocated = []
+    for i, n in enumerate(sizes):
+        try:
+            coords = part.allocate(n, f"b{i}")
+        except AllocationError:
+            continue
+        allocated.append((f"b{i}", coords))
+        assert len(coords) == n
+        part.check_invariants()
+    seen = set()
+    for bid, coords in allocated:
+        assert not (set(coords) & seen)
+        seen |= set(coords)
+    for bid, _ in allocated:
+        part.release(bid)
+    assert len(part.free_chips()) == topo.n_chips
+
+
+def test_partitioner_contiguity():
+    topo = Topology(n_pods=1, pod_x=8, pod_y=8)
+    part = Partitioner(topo)
+    coords = part.allocate(8, "b0")
+    xs = sorted({c[1] for c in coords})
+    ys = sorted({c[2] for c in coords})
+    assert len(coords) == (xs[-1] - xs[0] + 1) * (ys[-1] - ys[0] + 1)
+
+
+def test_partitioner_unhealthy_excluded():
+    topo = Topology(n_pods=1, pod_x=4, pod_y=4)
+    part = Partitioner(topo)
+    part.mark_unhealthy((0, 0, 0))
+    coords = part.allocate(16 - 4, "b0")  # 12 chips can't include dead chip
+    assert (0, 0, 0) not in coords
+
+
+def test_partitioner_resize_never_empty():
+    topo = Topology(n_pods=1, pod_x=8, pod_y=8)
+    part = Partitioner(topo)
+    part.allocate(4, "b0")
+    new = part.resize("b0", 16)
+    assert len(new) == 16
+    assert set(part.owned_by("b0")) == set(new)
+
+
+def test_mesh_shape_for():
+    assert mesh_shape_for(256) == (16, 16)
+    for n in (1, 2, 4, 8, 16, 64, 512):
+        d, m = mesh_shape_for(n)
+        assert d * m == n and m <= 16
+
+
+# ----------------------------------------------------------- state machine
+
+def test_lifecycle_happy_path():
+    reg = Registry()
+    app = reg.register(BlockRequest("alice", "job", 4))
+    grant = BlockGrant.new([(0, 0, 0)], (1, 1), 60.0)
+    reg.approve(app, grant)
+    reg.confirm(app, grant.token)
+    reg.set_state(app, BlockState.ACTIVE)
+    reg.set_state(app, BlockState.RUNNING)
+    reg.set_state(app, BlockState.DONE)
+    reg.set_state(app, BlockState.EXPIRED)
+    assert reg.get(app).state == BlockState.EXPIRED
+
+
+def test_lifecycle_illegal_transition():
+    reg = Registry()
+    app = reg.register(BlockRequest("alice", "job", 4))
+    with pytest.raises(ValueError):
+        reg.set_state(app, BlockState.RUNNING)   # must be approved first
+
+
+def test_confirm_requires_token():
+    reg = Registry()
+    app = reg.register(BlockRequest("alice", "job", 4))
+    grant = BlockGrant.new([(0, 0, 0)], (1, 1), 60.0)
+    reg.approve(app, grant)
+    with pytest.raises(PermissionError):
+        reg.confirm(app, "wrong-token")
+
+
+def test_expiry_detection():
+    reg = Registry()
+    app = reg.register(BlockRequest("alice", "job", 4))
+    grant = BlockGrant.new([(0, 0, 0)], (1, 1), duration_s=-1.0)  # past
+    reg.approve(app, grant)
+    assert app in reg.expired()
+
+
+# ------------------------------------------------------------ interference
+
+def test_contiguous_blocks_fully_isolated():
+    """The paper's core claim, structurally: disjoint contiguous blocks share
+    zero fabric links."""
+    topo = Topology(n_pods=1, pod_x=8, pod_y=8, wrap=False)
+    a = rect_coords(0, 0, 0, 4, 4)
+    b = rect_coords(0, 4, 4, 4, 4)
+    rep = interference.analyze_blocks(topo, {"a": a, "b": b})
+    assert rep.isolated
+    assert rep.slowdown == {"a": 1.0, "b": 1.0}
+
+
+def test_fragmented_blocks_interfere():
+    """Anti-case: interleaved (non-contiguous) placements route through each
+    other and share links — what the allocator's contiguity rule prevents."""
+    topo = Topology(n_pods=1, pod_x=8, pod_y=1, wrap=False)
+    a = [(0, 0, 0), (0, 2, 0), (0, 4, 0)]   # interleaved with b
+    b = [(0, 1, 0), (0, 3, 0), (0, 5, 0)]
+    rep = interference.analyze_blocks(topo, {"a": a, "b": b})
+    assert not rep.isolated
+    assert max(rep.slowdown.values()) > 1.0
+
+
+def test_fig3_prediction_shape():
+    topo = Topology(n_pods=1, pod_x=8, pod_y=8, wrap=False)
+    a = rect_coords(0, 0, 0, 4, 4)
+    b = rect_coords(0, 4, 0, 4, 4)
+    rows = interference.predicted_fig3(topo, a, b,
+                                       [2 ** i for i in range(20, 29, 2)])
+    assert all(r["shared_links"] == 0 for r in rows)
+    # multi-block bandwidth within 10% of single for large messages (Fig. 3)
+    big = rows[-1]
+    assert big["bw_multi_GBs"] > 0.9 * big["bw_single_GBs"]
+
+
+# ----------------------------------------------------------------- monitor
+
+def test_monitor_straggler_detection():
+    m = Monitor()
+    for i in range(16):
+        m.record_step("fast", 0.1, 4)
+        m.record_step("slow", 0.1 if i < 12 else 0.9, 4)
+    assert "slow" in m.stragglers()
+    assert "fast" not in m.stragglers()
+
+
+def test_monitor_usage_accounting():
+    m = Monitor()
+    m.record_step("b", 2.0, 8)
+    assert m.report()["b"]["chip_seconds"] == pytest.approx(16.0)

@@ -1,0 +1,189 @@
+"""Per-kernel allclose sweeps: Pallas (interpret mode) and the chunked jnp
+production paths vs. the naive oracles in kernels/ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+KEY = jax.random.PRNGKey(42)
+
+
+def tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=3e-5, rtol=3e-4)
+
+
+# ---------------------------------------------------------------- attention
+
+ATTN_CASES = [
+    # (B, Hq, Hkv, Sq, Sk, D, Dv, causal, window)
+    (1, 2, 2, 16, 16, 16, 16, True, 0),
+    (2, 4, 2, 48, 48, 32, 32, True, 0),       # GQA
+    (1, 4, 1, 33, 65, 16, 16, True, 0),       # ragged sizes, MQA
+    (2, 2, 2, 32, 32, 16, 16, False, 0),      # bidirectional
+    (1, 2, 2, 64, 64, 16, 16, True, 24),      # sliding window
+    (1, 2, 2, 40, 40, 16, 8, True, 0),        # Dv != D
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_pallas_vs_ref(case, dtype):
+    B, Hq, Hkv, Sq, Sk, D, Dv, causal, window = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hq, Sq, D), dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, Sk, D), dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, Sk, Dv), dtype)
+    want = ref.attention(q, k, v, causal=causal, sliding_window=window)
+    got = flash_attention_pallas(q, k, v, causal=causal,
+                                 sliding_window=window,
+                                 block_q=16, block_k=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+def test_flash_attention_jnp_vs_ref(case):
+    B, Hq, Hkv, Sq, Sk, D, Dv, causal, window = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hq, Sq, D))
+    k = jax.random.normal(ks[1], (B, Hkv, Sk, D))
+    v = jax.random.normal(ks[2], (B, Hkv, Sk, Dv))
+    want = ref.attention(q, k, v, causal=causal, sliding_window=window)
+    got = ops._flash_jnp(q, k, v, causal, window, None, 0, 16)
+    np.testing.assert_allclose(got, want, atol=3e-5, rtol=3e-4)
+
+
+@pytest.mark.parametrize("case", ATTN_CASES[:4])
+def test_flash_attention_custom_vjp_grads(case):
+    """Flash backward (custom VJP) == autodiff through naive reference."""
+    B, Hq, Hkv, Sq, Sk, D, Dv, causal, window = case
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, Hq, Sq, D))
+    k = jax.random.normal(ks[1], (B, Hkv, Sk, D))
+    v = jax.random.normal(ks[2], (B, Hkv, Sk, Dv))
+    ct = jax.random.normal(ks[3], (B, Hq, Sq, Dv))
+
+    def loss_flash(q, k, v):
+        return jnp.sum(ops._flash_jnp(q, k, v, causal, window, None, 0, 16) * ct)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(ref.attention(q, k, v, causal=causal,
+                                     sliding_window=window) * ct)
+
+    g_flash = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    g_ref = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for gf, gr in zip(g_flash, g_ref):
+        np.testing.assert_allclose(gf, gr, atol=2e-4, rtol=2e-3)
+
+
+def test_decode_attention_matches_ref():
+    B, Hq, Hkv, S, D = 2, 4, 2, 24, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hq, 1, D))
+    k = jax.random.normal(ks[1], (B, Hkv, S, D))
+    v = jax.random.normal(ks[2], (B, Hkv, S, D))
+    cache_len = 17
+    want = ref.attention(q, k[:, :, :cache_len], v[:, :, :cache_len],
+                         causal=True, q_offset=cache_len - 1)
+    got = ops.decode_attention(q, k, v, jnp.int32(cache_len))
+    np.testing.assert_allclose(got, want, atol=3e-5, rtol=3e-4)
+
+
+# ------------------------------------------------------------------ rmsnorm
+
+@pytest.mark.parametrize("shape", [(4, 64), (3, 17, 128), (1, 1, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_pallas_vs_ref(shape, dtype):
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], shape, dtype)
+    s = jax.random.normal(ks[1], (shape[-1],), dtype)
+    got = rmsnorm_pallas(x, s, interpret=True, block_rows=8)
+    want = ref.rmsnorm(x, s)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+# ---------------------------------------------------------------------- ssd
+
+SSD_CASES = [(1, 16, 2, 8, 4, 8), (2, 40, 3, 8, 4, 16), (1, 33, 1, 16, 8, 8)]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_pallas_vs_ref(case):
+    Bt, S, H, P, N, chunk = case
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (Bt, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bt, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    B = jax.random.normal(ks[3], (Bt, S, N)) * 0.5
+    C = jax.random.normal(ks[4], (Bt, S, N)) * 0.5
+    D = jnp.ones((H,))
+    yw, hw = ref.ssd_scan(x, dt, A, B, C, D)
+    yg, _ = ssd_scan_pallas(x, dt, A, B, C, D, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(yg, yw, atol=5e-4, rtol=5e-3)
+    yj, hj = ops._ssd_jnp(x, dt, A, B, C, D, chunk=chunk, h0=None)
+    np.testing.assert_allclose(yj, yw, atol=5e-4, rtol=5e-3)
+    np.testing.assert_allclose(hj, hw, atol=5e-4, rtol=5e-3)
+
+
+def test_ssd_decode_matches_scan():
+    Bt, S, H, P, N = 2, 12, 2, 8, 4
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (Bt, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bt, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    B = jax.random.normal(ks[3], (Bt, S, N)) * 0.5
+    C = jax.random.normal(ks[4], (Bt, S, N)) * 0.5
+    D = jnp.ones((H,))
+    y_ref, h_ref = ref.ssd_scan(x, dt, A, B, C, D)
+    h = jnp.zeros((Bt, H, P, N))
+    ys = []
+    for t in range(S):
+        y, h = ops.ssd_decode_step(x[:, t], dt[:, t], A, B[:, t], C[:, t],
+                                   D, h)
+        ys.append(y)
+    np.testing.assert_allclose(jnp.stack(ys, 1), y_ref, atol=5e-4, rtol=5e-3)
+    np.testing.assert_allclose(h, h_ref, atol=5e-4, rtol=5e-3)
+
+
+# -------------------------------------------------------------------- mlstm
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_mlstm_chunked_vs_ref(chunk):
+    B, H, S, Dk, Dv = 2, 2, 37, 16, 8
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (B, H, S, Dk))
+    k = jax.random.normal(ks[1], (B, H, S, Dk))
+    v = jax.random.normal(ks[2], (B, H, S, Dv))
+    ig = jax.random.normal(ks[3], (B, H, S))
+    fg = jax.random.normal(ks[4], (B, H, S)) + 2.0
+    hw, (Cw, nw, mw) = ref.mlstm_scan(q, k, v, ig, fg)
+    hg, (Cg, ng, mg) = ops.mlstm_scan(q, k, v, ig, fg, chunk=chunk)
+    np.testing.assert_allclose(hg, hw, atol=5e-4, rtol=5e-3)
+    np.testing.assert_allclose(Cg, Cw, atol=5e-4, rtol=5e-3)
+    np.testing.assert_allclose(mg, mw, atol=5e-4, rtol=5e-3)
+
+
+def test_mlstm_decode_matches_scan():
+    B, H, S, Dk, Dv = 1, 2, 9, 8, 8
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (B, H, S, Dk))
+    k = jax.random.normal(ks[1], (B, H, S, Dk))
+    v = jax.random.normal(ks[2], (B, H, S, Dv))
+    ig = jax.random.normal(ks[3], (B, H, S))
+    fg = jax.random.normal(ks[4], (B, H, S)) + 2.0
+    h_ref, _ = ref.mlstm_scan(q, k, v, ig, fg)
+    carry = (jnp.zeros((B, H, Dk, Dv)), jnp.zeros((B, H, Dk)),
+             jnp.full((B, H), -jnp.inf))
+    hs = []
+    for t in range(S):
+        h, carry = ops.mlstm_decode_step(q[:, :, t], k[:, :, t], v[:, :, t],
+                                         ig[:, :, t], fg[:, :, t], carry)
+        hs.append(h)
+    np.testing.assert_allclose(jnp.stack(hs, 2), h_ref, atol=5e-4, rtol=5e-3)

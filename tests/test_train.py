@@ -1,0 +1,192 @@
+"""Optimizer, quantized state, grad compression, checkpoint, and an
+end-to-end loss-goes-down integration test with checkpoint-resume
+equivalence."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.configs as C
+from repro.checkpoint.manager import CheckpointManager
+from repro.data import pipeline
+from repro.models.config import ShapeConfig
+from repro.train import grad_compression as gc
+from repro.train import optimizer as opt_lib
+from repro.train import quantized_state as qs
+from repro.train import train_step as train_lib
+
+KEY = jax.random.PRNGKey(3)
+
+
+# ----------------------------------------------------------------- adamw
+
+def test_adamw_converges_quadratic():
+    cfg = opt_lib.OptConfig(lr=0.1, warmup_steps=0, total_steps=200,
+                            weight_decay=0.0, min_lr_frac=1.0)
+    target = jnp.array([1.5, -2.0, 0.5])
+    params = {"w": jnp.zeros(3)}
+    state = opt_lib.init(params, cfg)
+    for _ in range(150):
+        grads = {"w": 2 * (params["w"] - target)}
+        params, state, _ = opt_lib.apply(cfg, params, state, grads)
+    np.testing.assert_allclose(params["w"], target, atol=0.05)
+
+
+def test_adamw_clipping():
+    cfg = opt_lib.OptConfig(clip_norm=1.0, warmup_steps=0)
+    params = {"w": jnp.zeros(4)}
+    state = opt_lib.init(params, cfg)
+    huge = {"w": jnp.full(4, 1e6)}
+    _, _, metrics = opt_lib.apply(cfg, params, state, huge)
+    assert float(metrics["grad_norm"]) > 1e6  # reported unclipped
+
+
+def test_schedule_warmup_cosine():
+    cfg = opt_lib.OptConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                            min_lr_frac=0.1)
+    assert float(opt_lib.schedule(cfg, jnp.int32(5))) == pytest.approx(0.5)
+    assert float(opt_lib.schedule(cfg, jnp.int32(10))) == pytest.approx(1.0)
+    assert float(opt_lib.schedule(cfg, jnp.int32(100))) == pytest.approx(0.1)
+
+
+def test_adamw_int8_states_track_fp32():
+    """8-bit Adam should land near the fp32 trajectory on a toy problem."""
+    target = jnp.array([1.5, -2.0, 0.5, 3.0] * 64)   # 256 elems = 1 block
+    def run(bits):
+        cfg = opt_lib.OptConfig(lr=0.05, warmup_steps=0, total_steps=300,
+                                weight_decay=0.0, min_lr_frac=1.0,
+                                state_bits=bits)
+        params = {"w": jnp.zeros_like(target)}
+        state = opt_lib.init(params, cfg)
+        for _ in range(200):
+            grads = {"w": 2 * (params["w"] - target)}
+            params, state, _ = opt_lib.apply(cfg, params, state, grads)
+        return params["w"]
+    w8, w32 = run(8), run(None)
+    np.testing.assert_allclose(w8, target, atol=0.15)
+    np.testing.assert_allclose(w8, w32, atol=0.15)
+
+
+# ------------------------------------------------------- quantized state
+
+@given(st.integers(1, 900), st.floats(0.01, 100.0))
+@settings(max_examples=30, deadline=None)
+def test_quantize_roundtrip_error_bound(n, scale):
+    """Property: blockwise int8 roundtrip error <= blockmax/127."""
+    x = jnp.sin(jnp.arange(n, dtype=jnp.float32) * 0.7) * scale
+    q = qs.quantize(x)
+    back = qs.dequantize(q)
+    assert back.shape == x.shape
+    err = np.max(np.abs(np.asarray(back - x)))
+    assert err <= scale / 127.0 * 1.01 + 1e-7
+
+
+def test_quantize_multidim():
+    x = jax.random.normal(KEY, (3, 5, 300))
+    back = qs.dequantize(qs.quantize(x))
+    assert back.shape == x.shape
+    assert np.max(np.abs(np.asarray(back - x))) < np.max(np.abs(x)) / 100
+
+
+# -------------------------------------------------------- grad compression
+
+def test_compression_error_feedback_property():
+    """EF property: sum of (quantized + carried error) over steps converges
+    to the true gradient sum (error does not accumulate unboundedly)."""
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.normal(size=257).astype(np.float32))
+    err = jnp.zeros_like(g_true)
+    total_q = jnp.zeros_like(g_true)
+    for _ in range(50):
+        codes, scale, err = gc.compress_residual(g_true, err)
+        total_q = total_q + gc.dequantize(codes, scale)
+    np.testing.assert_allclose(total_q / 50, g_true,
+                               atol=float(jnp.abs(g_true).max()) / 100)
+
+
+def test_quantize_exact_for_uniform():
+    g = jnp.full((128,), 0.5)
+    codes, scale = gc.quantize(g)
+    np.testing.assert_allclose(gc.dequantize(codes, scale), g, rtol=1e-6)
+
+
+# ------------------------------------------------------------- checkpoint
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), namespace="t")
+    tree = {"a": jnp.arange(8, dtype=jnp.bfloat16),
+            "b": {"c": jnp.ones((3, 3)), "d": jnp.int32(7)},
+            "count": 5}
+    mgr.save(3, tree)
+    restored, step = mgr.restore(tree)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(restored["a"], np.float32),
+                                  np.asarray(tree["a"], np.float32))
+    assert restored["count"] == 5
+    assert restored["a"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_gc_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), namespace="t", keep=2)
+    tree = {"x": jnp.zeros(4)}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree)
+    assert mgr.steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_checkpoint_corruption_detected(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), namespace="t")
+    tree = {"x": jnp.arange(100, dtype=jnp.float32)}
+    path = mgr.save(1, tree)
+    leaf = os.path.join(path, "leaf_00000.npy")
+    arr = np.load(leaf)
+    arr[0] = 999.0
+    np.save(leaf, arr)
+    with pytest.raises(IOError, match="crc"):
+        mgr.restore(tree)
+
+
+def test_checkpoint_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), namespace="t")
+    tree = {"x": jnp.ones((64, 64))}
+    mgr.save_async(1, tree)
+    mgr.wait()
+    restored, _ = mgr.restore(tree)
+    np.testing.assert_array_equal(restored["x"], tree["x"])
+
+
+# ----------------------------------------------------------- integration
+
+@pytest.mark.slow
+def test_training_reduces_loss_and_resumes(tmp_path):
+    """30 steps of a tiny xlstm: loss decreases; stopping at 15 and resuming
+    from checkpoint reproduces the same final loss (bitwise state restore)."""
+    cfg = C.get_smoke("deepseek_7b")
+    shape = ShapeConfig("t", "train", seq_len=64, global_batch=4,
+                        microbatch=2)
+    opt_cfg = opt_lib.OptConfig(lr=1e-3, warmup_steps=2, total_steps=30)
+    step = jax.jit(train_lib.make_train_step(cfg, shape, opt_cfg))
+    data = pipeline.DataIterator(cfg, shape)
+
+    state = train_lib.make_train_state(cfg, KEY, opt_cfg)
+    losses = []
+    mgr = CheckpointManager(str(tmp_path), namespace="run")
+    for i in range(30):
+        state, m = step(state, data.batch(i))
+        losses.append(float(m["loss"]))
+        if i == 14:
+            mgr.save(15, state)
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1, losses
+
+    # resume path
+    state2 = train_lib.make_train_state(cfg, KEY, opt_cfg)
+    state2, _ = mgr.restore(state2)
+    losses2 = []
+    for i in range(15, 30):
+        state2, m = step(state2, data.batch(i))
+        losses2.append(float(m["loss"]))
+    np.testing.assert_allclose(losses2, losses[15:], rtol=1e-4)
