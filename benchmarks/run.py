@@ -4,6 +4,7 @@
           (measured, subprocess w/ 8 host devices) + structural link model
   §4      multi-block overhead on real jobs    -> benchmarks/multiblock_overhead.py
   (assignment) roofline table per cell         -> benchmarks/roofline_report.py
+  (scheduler) event-driven vs round-robin      -> benchmarks/scheduler_throughput.py
 
 Prints ``name,us_per_call,derived`` CSV.  Subprocesses own the multi-device
 XLA flag so this process (and pytest) keep a single device.
@@ -57,6 +58,8 @@ def main() -> None:
     run_sub("multiblock_overhead.py", devices=8)
     print("# --- roofline table (from dry-run artifacts) ---")
     run_sub("roofline_report.py", devices=1)
+    print("# --- scheduler: event-driven dispatch vs round-robin ---")
+    run_sub("scheduler_throughput.py", devices=1)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,90 @@
+"""Event-driven dispatch vs. the old fixed-order round-robin ``step_all``.
+
+Scenario (ISSUE acceptance): 3 fast blocks + 1 block 4x slower, each owed
+the same amount of device compute (fast blocks owe 4x the steps).  The old
+dispatcher rounds over *every* active block and blocks in fixed order, so
+each round is gated by the slowest still-active block; the event-driven
+loop keeps per-block in-flight windows and harvests completions in finish
+order, so the makespan collapses to the longest single chain.
+
+Uses SimRuntime (wall-clock model of a block's serial step chain, blocks
+concurrent across sub-meshes) so the comparison isolates *dispatcher*
+semantics from XLA/CPU-contention noise.  Output follows the repo's
+benchmark CSV convention: name,us_per_call,derived.
+
+    PYTHONPATH=src python benchmarks/scheduler_throughput.py
+"""
+import sys
+import os
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.scheduler import SimRuntime, drive
+
+FAST_S = 0.010          # fast block step time
+SLOW_S = 0.040          # slow block: 4x slower
+FAST_STEPS = 16         # equal compute: 16 * 10ms == 4 * 40ms
+SLOW_STEPS = 4
+
+
+def make_blocks():
+    return {"fast0": SimRuntime(FAST_S), "fast1": SimRuntime(FAST_S),
+            "fast2": SimRuntime(FAST_S), "slow": SimRuntime(SLOW_S)}
+
+
+TARGETS = {"fast0": FAST_STEPS, "fast1": FAST_STEPS,
+           "fast2": FAST_STEPS, "slow": SLOW_STEPS}
+
+
+def old_round_robin(rts, targets):
+    """Seed ``step_all`` semantics: per round, async-dispatch one step to
+    every still-active block, then block_until_ready in fixed order."""
+    remaining = dict(targets)
+    while any(remaining.values()):
+        active = [a for a, n in remaining.items() if n > 0]
+        for a in active:
+            rts[a].dispatch()
+            remaining[a] -= 1
+        for a in active:          # fixed-order wait: head-of-line blocking
+            rts[a].poll(block=True)
+
+
+def old_naive(rts, targets):
+    """Old API as actually usable: ``step_all(rounds=N)`` has no per-block
+    targets, so every block steps max(targets) times."""
+    rounds = max(targets.values())
+    uniform = {a: rounds for a in targets}
+    old_round_robin(rts, uniform)
+
+
+def timed(fn, *args):
+    t0 = time.perf_counter()
+    fn(*args)
+    return time.perf_counter() - t0
+
+
+def main():
+    total_steps = sum(TARGETS.values())
+    t_naive = timed(old_naive, make_blocks(), TARGETS)
+    t_rr = timed(old_round_robin, make_blocks(), TARGETS)
+    t_event = timed(lambda: drive(make_blocks(), TARGETS, max_inflight=2))
+
+    print("name,us_per_call,derived")
+    print(f"step_all_naive_uniform_rounds,{t_naive/total_steps*1e6:.0f},"
+          f"{t_naive:.3f}")
+    print(f"step_all_round_robin,{t_rr/total_steps*1e6:.0f},{t_rr:.3f}")
+    print(f"event_driven_dispatch,{t_event/total_steps*1e6:.0f},"
+          f"{t_event:.3f}")
+    print(f"speedup_vs_round_robin,0,{t_rr/t_event:.2f}")
+    print(f"speedup_vs_naive,0,{t_naive/t_event:.2f}")
+    # ideal: event ~= longest chain (160ms); rr ~= 4*40 + 12*10 = 280ms
+    if t_event >= t_rr:
+        print("WARNING: event-driven dispatch did not beat round-robin",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,58 @@
+"""Version-compatibility shims for jax.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to the top-level
+``jax`` namespace, and the partial-auto parameter changed along the way:
+old jax takes ``auto`` (the axes left to GSPMD), new jax takes
+``axis_names`` (the axes made manual).  This module exports a single
+``shard_map`` with the *new* calling convention (``axis_names``) that runs
+on both, translating ``axis_names`` into ``auto`` on old versions.
+
+On jax<=0.4 a partial-auto shard_map additionally requires
+``check_rep=False`` and must be called under ``jit``; callers here already
+jit their step functions, and the shim forces ``check_rep`` off whenever
+any mesh axis stays auto.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+
+_NATIVE = getattr(jax, "shard_map", None)
+if _NATIVE is None:
+    from jax.experimental.shard_map import shard_map as _LEGACY
+else:
+    _LEGACY = None
+
+
+def shard_map(f: Optional[Callable] = None, *, mesh, in_specs, out_specs,
+              axis_names=None, check_rep=None, **kwargs):
+    """``jax.shard_map`` with ``axis_names`` semantics on every jax version.
+
+    ``axis_names`` is the set of mesh axes made *manual*; every other mesh
+    axis stays under GSPMD auto-sharding.  ``None`` means fully manual.
+    Usable directly or via ``functools.partial`` as a decorator.
+    """
+    if f is None:
+        return functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, axis_names=axis_names,
+                                 check_rep=check_rep, **kwargs)
+    if _NATIVE is not None:
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        if check_rep is not None:
+            kwargs["check_rep"] = check_rep
+        return _NATIVE(f, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, **kwargs)
+    mesh_axes = set(getattr(mesh, "axis_names", ()))
+    if axis_names is None:
+        auto = frozenset(kwargs.pop("auto", frozenset()))
+    else:
+        auto = frozenset(mesh_axes - set(axis_names))
+    if auto:
+        check_rep = False
+    return _LEGACY(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   auto=auto,
+                   check_rep=True if check_rep is None else check_rep,
+                   **kwargs)

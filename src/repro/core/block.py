@@ -19,6 +19,7 @@ from repro.core.topology import Coord
 
 class BlockState(str, enum.Enum):
     REQUESTED = "requested"       # (1) user registered an application
+    QUEUED = "queued"             # (1b) admitted to the waitlist: pod full
     APPROVED = "approved"         # (2) admin reviewed, nodes assigned
     CONFIRMED = "confirmed"       # (3) user reconfirmed the assignment
     ACTIVE = "active"             # (3b) nodes powered, daemons up (runtime built)
@@ -31,7 +32,10 @@ class BlockState(str, enum.Enum):
 
 # legal transitions of the lifecycle state machine
 TRANSITIONS = {
-    BlockState.REQUESTED: {BlockState.APPROVED, BlockState.DENIED},
+    BlockState.REQUESTED: {BlockState.APPROVED, BlockState.DENIED,
+                           BlockState.QUEUED},
+    BlockState.QUEUED: {BlockState.APPROVED, BlockState.DENIED,
+                        BlockState.EXPIRED},
     BlockState.APPROVED: {BlockState.CONFIRMED, BlockState.DENIED,
                           BlockState.EXPIRED},
     BlockState.CONFIRMED: {BlockState.ACTIVE, BlockState.EXPIRED},
@@ -52,6 +56,7 @@ class BlockRequest:
     arch: str = ""                    # architecture config id
     shape: str = "train_4k"           # input-shape cell
     duration_s: float = 3600.0        # requested usage period
+    priority: int = 0                 # admission priority (higher = sooner)
 
 
 @dataclasses.dataclass
@@ -86,6 +91,7 @@ class Block:
     history: List[Tuple[float, str]] = dataclasses.field(default_factory=list)
     result_path: Optional[str] = None
     failure_reason: Optional[str] = None
+    queued_at: Optional[float] = None   # when the app entered the waitlist
 
     def transition(self, new_state: BlockState, note: str = "") -> None:
         if new_state not in TRANSITIONS.get(self.state, set()):

@@ -1,10 +1,11 @@
 """ClusterController — the paper's master node + administrator, TPU-native.
 
 Owns the chip inventory (Partitioner), the application workflow (Registry),
-per-block runtimes, and the Monitor.  One controller process drives *all*
-blocks concurrently (the shared-master property the paper's Fig. 3
-measures); per-block dispatch is asynchronous, so blocks overlap on device
-time and only serialize on the host Python thread.
+per-block runtimes, the Monitor, and the BlockScheduler.  One controller
+process drives *all* blocks concurrently (the shared-master property the
+paper's Fig. 3 measures); dispatch is event-driven with per-block in-flight
+windows, and requests the pod cannot fit are waitlisted and auto-admitted
+as capacity frees (``submit``/``tick``) instead of raising.
 
 Fault tolerance: chip-failure injection marks chips unhealthy, fails the
 owning block, re-carves a fresh sub-mesh from the free pool and restores the
@@ -13,11 +14,9 @@ re-carve + reshard-restore path.
 """
 from __future__ import annotations
 
-import time
 from typing import Dict, List, Optional, Sequence
 
 import jax
-import numpy as np
 
 from repro.core import interference
 from repro.core.block import Block, BlockGrant, BlockRequest, BlockState
@@ -25,6 +24,7 @@ from repro.core.monitor import Monitor
 from repro.core.partition import AllocationError, Partitioner, mesh_shape_for
 from repro.core.registry import Registry
 from repro.core.runtime import BlockRuntime, JobSpec
+from repro.core.scheduler import BlockScheduler
 from repro.core.topology import Coord, Topology
 
 
@@ -43,6 +43,7 @@ class ClusterController:
         self.monitor = Monitor()
         self.runtimes: Dict[str, BlockRuntime] = {}   # app_id -> runtime
         self.ckpt_root = ckpt_root
+        self.scheduler = BlockScheduler(self)
 
     # -------------------------------------------------- device mapping
     def devices_for(self, coords: Sequence[Coord]) -> List:
@@ -51,10 +52,45 @@ class ClusterController:
     # -------------------------------------------------- workflow (Fig. 2)
     def register(self, user: str, job_description: str, n_chips: int,
                  arch: str = "", shape: str = "train_4k",
-                 duration_s: float = 3600.0) -> str:
+                 duration_s: float = 3600.0, priority: int = 0) -> str:
         return self.registry.register(BlockRequest(
             user=user, job_description=job_description, n_chips=n_chips,
-            arch=arch, shape=shape, duration_s=duration_s))
+            arch=arch, shape=shape, duration_s=duration_s,
+            priority=priority))
+
+    def submit(self, user: str, job_description: str, n_chips: int,
+               job: Optional[JobSpec] = None, priority: int = 0,
+               pod: Optional[int] = None, **register_kw):
+        """Automated admission (no admin in the loop): register and either
+        admit now or waitlist until capacity frees.  Returns
+        ``(app_id, grant-or-None)``; with a ``job`` the block is activated
+        and run the moment it is admitted."""
+        app_id = self.register(user, job_description, n_chips,
+                               priority=priority, **register_kw)
+        grant = self.scheduler.submit(app_id, job=job, pod=pod)
+        return app_id, grant
+
+    def grant_block(self, app_id: str, n_chips: int,
+                    pod: Optional[int] = None) -> BlockGrant:
+        """Grant finalization (shared by admin review and scheduler
+        admission): allocate under a pending reservation, mint the grant,
+        re-tag the chips to the real block id atomically — a concurrent
+        allocate must never observe them as free mid-retag — and approve.
+        Raises AllocationError (leaving no chips held) when nothing fits."""
+        blk = self.registry.get(app_id)
+        tmp_grant_id = f"pending_{app_id}"
+        coords = self.partitioner.allocate(n_chips, tmp_grant_id, pod=pod)
+        grant = BlockGrant.new(coords, mesh_shape_for(n_chips),
+                               blk.request.duration_s)
+        self.partitioner.retag(tmp_grant_id, grant.block_id)
+        try:
+            self.registry.approve(app_id, grant)
+        except Exception:
+            # e.g. illegal transition (review of an already-approved app):
+            # give the chips back instead of leaking them under an orphan id
+            self.partitioner.release(grant.block_id)
+            raise
+        return grant
 
     def review(self, app_id: str, *, approve: bool = True,
                pod: Optional[int] = None, n_chips: Optional[int] = None) -> Optional[BlockGrant]:
@@ -64,17 +100,8 @@ class ClusterController:
         if not approve:
             self.registry.deny(app_id, "admin denied")
             return None
-        n = n_chips or blk.request.n_chips
-        tmp_grant_id = f"pending_{app_id}"
-        coords = self.partitioner.allocate(n, tmp_grant_id, pod=pod)
-        grant = BlockGrant.new(coords, mesh_shape_for(n),
-                               blk.request.duration_s)
-        # re-tag chips with the real block id
-        self.partitioner.release(tmp_grant_id)
-        for c in coords:
-            self.partitioner.chips[c].owner = grant.block_id
-        self.registry.approve(app_id, grant)
-        return grant
+        return self.grant_block(app_id, n_chips or blk.request.n_chips,
+                                pod=pod)
 
     def confirm(self, app_id: str, token: str) -> None:
         self.registry.confirm(app_id, token)
@@ -109,46 +136,39 @@ class ClusterController:
         }
 
     def expire(self, app_id: str) -> None:
-        """Usage period over: shut nodes down, free the block."""
+        """Usage period over: shut nodes down, free the block, and admit
+        whatever the freed capacity now fits from the waitlist."""
         blk = self.registry.get(app_id)
         if blk.grant:
             self.partitioner.release(blk.grant.block_id)
         self.runtimes.pop(app_id, None)
         self.registry.set_state(app_id, BlockState.EXPIRED, "period over")
+        self.scheduler.pump()
 
     def tick(self, now: Optional[float] = None) -> List[str]:
-        """Periodic housekeeping: auto-expire blocks past their period."""
+        """Periodic housekeeping: auto-expire blocks past their period,
+        admit from the waitlist, sample pod utilization."""
         expired = self.registry.expired(now)
         for app_id in expired:
             self.expire(app_id)
+        self.scheduler.pump(now)
+        self.monitor.sample_utilization(
+            self.topo.n_chips - self.partitioner.free_capacity(),
+            self.topo.n_chips)
         return expired
 
     # ------------------------------------------------ concurrent execution
     def step_all(self, rounds: int = 1, sync_every: int = 1) -> Dict[str, List[Dict]]:
-        """Round-robin dispatch across all RUNNING blocks.
+        """Step every RUNNING block ``rounds`` times, event-driven.
 
-        Dispatch is async (jax queues the work per block's devices); blocks
-        execute concurrently on their disjoint sub-meshes while the host
-        thread rotates — the multi-block concurrency of the paper.
+        Delegates to the BlockScheduler's dispatch loop: completions are
+        harvested in device-finish order with per-block in-flight windows
+        (``sync_every`` = dispatch depth), so a slow block no longer stalls
+        fast blocks on the host thread the way the old fixed-order
+        round-robin ``block_until_ready`` did.
         """
-        out: Dict[str, List[Dict]] = {}
-        running = self.registry.by_state(BlockState.RUNNING)
-        for r in range(rounds):
-            t0 = {}
-            for app_id in running:
-                rt = self.runtimes[app_id]
-                t0[app_id] = time.perf_counter()
-                rt.step_async()
-            for app_id in running:
-                rt = self.runtimes[app_id]
-                jax.block_until_ready(jax.tree.leaves(
-                    rt.state if rt.job.kind == "train" else rt.token))
-                dt = time.perf_counter() - t0[app_id]
-                blk = self.registry.get(app_id)
-                self.monitor.record_step(blk.block_id, dt,
-                                         blk.grant.n_chips)
-                out.setdefault(app_id, []).append({"step_s": dt})
-        return out
+        return self.scheduler.run_dispatch(
+            rounds, max_inflight=max(1, sync_every))
 
     # ------------------------------------------------------ fault handling
     def inject_chip_failure(self, coord: Coord) -> Optional[str]:
@@ -174,8 +194,6 @@ class ClusterController:
         self.partitioner.release(blk.grant.block_id)
         coords = self.partitioner.allocate(blk.grant.n_chips,
                                            blk.grant.block_id)
-        new_grant = BlockGrant.new(coords, blk.grant.mesh_shape,
-                                   max(blk.grant.expires_at - time.time(), 60))
         new_grant = BlockGrant(block_id=blk.grant.block_id, coords=coords,
                                mesh_shape=blk.grant.mesh_shape,
                                token=blk.grant.token,
@@ -203,6 +221,7 @@ class ClusterController:
         rt = BlockRuntime.rebuild(old_rt, new_grant,
                                   self.devices_for(coords), self.ckpt_root)
         self.runtimes[app_id] = rt
+        self.scheduler.pump()   # a shrink may free room for queued blocks
         return rt
 
     # ------------------------------------------------------- interference

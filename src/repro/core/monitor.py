@@ -30,6 +30,12 @@ class Monitor:
     def __init__(self):
         self._lock = threading.RLock()
         self.stats: Dict[str, BlockStats] = {}
+        # admission-queue accounting (BlockScheduler feeds these)
+        self.queue_depth = 0
+        self.enqueued_total = 0
+        self.admitted_total = 0
+        self.queue_waits: List[float] = []       # seconds queued per admission
+        self.util_samples: List[float] = []      # fraction of chips in use
 
     def _get(self, block_id: str) -> BlockStats:
         with self._lock:
@@ -55,6 +61,47 @@ class Monitor:
 
     def heartbeat(self, block_id: str) -> None:
         self._get(block_id).last_heartbeat = time.time()
+
+    # ------------------------------------------------------ admission queue
+    def record_enqueue(self, app_id: str) -> None:
+        with self._lock:
+            self.queue_depth += 1
+            self.enqueued_total += 1
+
+    def record_dequeue(self, app_id: str) -> None:
+        """Left the queue without admission (denied / force-expired)."""
+        with self._lock:
+            self.queue_depth = max(0, self.queue_depth - 1)
+
+    def record_admission(self, app_id: str, wait_s: float) -> None:
+        with self._lock:
+            self.queue_depth = max(0, self.queue_depth - 1)
+            self.admitted_total += 1
+            self.queue_waits.append(wait_s)
+            if len(self.queue_waits) > 2048:
+                self.queue_waits = self.queue_waits[-1024:]
+
+    def sample_utilization(self, used_chips: int, total_chips: int) -> None:
+        with self._lock:
+            self.util_samples.append(used_chips / max(1, total_chips))
+            if len(self.util_samples) > 2048:
+                self.util_samples = self.util_samples[-1024:]
+
+    def queue_report(self) -> Dict[str, float]:
+        """Queue depth / wait-time / utilization summary for operators."""
+        with self._lock:
+            waits = self.queue_waits
+            return {
+                "depth": self.queue_depth,
+                "enqueued_total": self.enqueued_total,
+                "admitted_total": self.admitted_total,
+                "mean_wait_s": statistics.mean(waits) if waits else 0.0,
+                "max_wait_s": max(waits) if waits else 0.0,
+                "utilization": (statistics.mean(self.util_samples)
+                                if self.util_samples else 0.0),
+                "utilization_now": (self.util_samples[-1]
+                                    if self.util_samples else 0.0),
+            }
 
     # ----------------------------------------------------------- stragglers
     def stragglers(self) -> List[str]:

@@ -79,10 +79,9 @@ class Partitioner:
                 return False
         return True
 
-    def allocate(self, n_chips: int, block_id: str,
-                 pod: Optional[int] = None) -> List[Coord]:
-        """First-fit contiguous rectangle of >= n_chips (exact when n_chips
-        factors into a rectangle that fits; raises otherwise)."""
+    def _candidate_shapes(self, n_chips: int) -> List[Tuple[int, int]]:
+        if n_chips < 1:
+            raise AllocationError(f"invalid block size {n_chips}")
         shapes = []
         for w in range(1, self.topo.pod_x + 1):
             if n_chips % w == 0 and n_chips // w <= self.topo.pod_y:
@@ -91,20 +90,73 @@ class Partitioner:
             raise AllocationError(f"{n_chips} chips has no rectangular shape")
         # prefer near-square (best locality / bisection)
         shapes.sort(key=lambda s: abs(math.log(s[0] / s[1])))
+        return shapes
+
+    def _find_rect(self, n_chips: int, pod: Optional[int]
+                   ) -> Optional[Tuple[int, int, int, int, int]]:
+        """First free (pod, x0, y0, w, h) rectangle, or None.  Caller holds
+        the lock (or accepts a racy dry-run answer, as can_fit does)."""
+        shapes = self._candidate_shapes(n_chips)
         pods = [pod] if pod is not None else list(range(self.topo.n_pods))
+        for p in pods:
+            for w, h in shapes:
+                for x0 in range(self.topo.pod_x - w + 1):
+                    for y0 in range(self.topo.pod_y - h + 1):
+                        if self._rect_free(p, x0, y0, w, h):
+                            return (p, x0, y0, w, h)
+        return None
+
+    def allocate(self, n_chips: int, block_id: str,
+                 pod: Optional[int] = None) -> List[Coord]:
+        """First-fit contiguous rectangle of >= n_chips (exact when n_chips
+        factors into a rectangle that fits; raises otherwise)."""
         with self._lock:
-            for p in pods:
-                for w, h in shapes:
-                    for x0 in range(self.topo.pod_x - w + 1):
-                        for y0 in range(self.topo.pod_y - h + 1):
-                            if self._rect_free(p, x0, y0, w, h):
-                                coords = rect_coords(p, x0, y0, w, h)
-                                for c in coords:
-                                    self.chips[c].owner = block_id
-                                return coords
+            found = self._find_rect(n_chips, pod)
+            if found is not None:
+                p, x0, y0, w, h = found
+                coords = rect_coords(p, x0, y0, w, h)
+                for c in coords:
+                    self.chips[c].owner = block_id
+                return coords
         raise AllocationError(
             f"no contiguous {n_chips}-chip rectangle free "
             f"(free={len(self.free_chips())})")
+
+    def can_fit(self, n_chips: int, pod: Optional[int] = None) -> bool:
+        """Admission dry-run: would ``allocate`` succeed right now?  Does not
+        mutate the inventory."""
+        with self._lock:
+            try:
+                return self._find_rect(n_chips, pod) is not None
+            except AllocationError:
+                return False
+
+    def shape_possible(self, n_chips: int) -> bool:
+        """Could this request *ever* fit (valid size with a rectangular
+        shape inside one pod)?  False means waitlisting it is pointless."""
+        try:
+            self._candidate_shapes(n_chips)
+            return True
+        except AllocationError:
+            return False
+
+    def free_capacity(self, pod: Optional[int] = None) -> int:
+        """Free healthy chips (upper bound on what can be admitted; actual
+        admission also needs a contiguous rectangle — see can_fit)."""
+        return len(self.free_chips(pod))
+
+    def retag(self, old_id: str, new_id: str) -> int:
+        """Atomically re-assign every chip owned by ``old_id`` to ``new_id``
+        (grant finalization: pending reservation -> real block id).  Holding
+        the lock across the whole sweep means a concurrent allocate can never
+        observe the chips as free mid-retag."""
+        with self._lock:
+            n = 0
+            for info in self.chips.values():
+                if info.owner == old_id:
+                    info.owner = new_id
+                    n += 1
+            return n
 
     def release(self, block_id: str) -> int:
         with self._lock:

@@ -22,6 +22,8 @@ class Registry:
         self._lock = threading.RLock()
         self.apps: Dict[str, Block] = {}
         self._next_id = 1
+        self._queue_seq = 0
+        self._queue_order: Dict[str, int] = {}   # app_id -> enqueue sequence
         self.state_path = state_path
 
     # ------------------------------------------------------------ workflow
@@ -42,6 +44,30 @@ class Registry:
             blk.transition(BlockState.APPROVED,
                            f"{grant.n_chips} chips assigned")
             self._persist()
+
+    def enqueue(self, app_id: str, note: str = "pod full") -> int:
+        """Place an application on the admission waitlist (QUEUED state).
+        Returns its FIFO sequence number (the base ordering the scheduler's
+        fair-share policy refines)."""
+        with self._lock:
+            blk = self.apps[app_id]
+            blk.transition(BlockState.QUEUED, note)
+            blk.queued_at = time.time()
+            self._queue_seq += 1
+            self._queue_order[app_id] = self._queue_seq
+            self._persist()
+            return self._queue_order[app_id]
+
+    def queue_seq(self, app_id: str) -> int:
+        with self._lock:
+            return self._queue_order.get(app_id, 0)
+
+    def queued(self) -> List[str]:
+        """QUEUED applications in FIFO enqueue order."""
+        with self._lock:
+            ids = [a for a, b in self.apps.items()
+                   if b.state == BlockState.QUEUED]
+            return sorted(ids, key=lambda a: self._queue_order.get(a, 0))
 
     def deny(self, app_id: str, reason: str = "") -> None:
         with self._lock:
@@ -103,6 +129,7 @@ class Registry:
                 "expires_at": blk.grant.expires_at if blk.grant else None,
                 "history": blk.history[-20:],
                 "failure": blk.failure_reason,
+                "queued_at": blk.queued_at,
             }
         os.makedirs(os.path.dirname(self.state_path) or ".", exist_ok=True)
         tmp = self.state_path + ".tmp"

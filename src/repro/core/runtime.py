@@ -8,9 +8,10 @@ checkpoint namespace) — the multi-daemon isolation property of the paper.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Any, Dict, Optional, Sequence
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -54,6 +55,10 @@ class BlockRuntime:
         self.state: Any = None
         self.cache: Any = None
         self.step_count = 0
+        # in-flight dispatch window: (dispatch wall-time, ready token) per
+        # async step not yet observed complete
+        self._inflight: Deque[Tuple[float, Any]] = collections.deque()
+        self._last_ready_t = 0.0
         self._build()
 
     # ------------------------------------------------------------ compile
@@ -146,6 +151,58 @@ class BlockRuntime:
             metrics = {}
         self.step_count += 1
         return metrics
+
+    # ------------------------------------------------- in-flight dispatch
+    @property
+    def inflight_depth(self) -> int:
+        return len(self._inflight)
+
+    def oldest_dispatch_t(self) -> float:
+        """Dispatch wall-time of the oldest in-flight step (the scheduler
+        blocks on the runtime with the smallest value when every window is
+        full).  +inf when nothing is in flight."""
+        return self._inflight[0][0] if self._inflight else float("inf")
+
+    def dispatch(self) -> None:
+        """Dispatch one async step and track its completion token.  The
+        scheduler caps how many of these are outstanding per block
+        (dispatch-depth backpressure) so host runahead stays bounded."""
+        t0 = time.perf_counter()
+        self.step_async()
+        token = (jax.tree.leaves(self.state)[0]
+                 if self.job.kind == "train" else self.token)
+        self._inflight.append((t0, token))
+
+    def poll(self, block: bool = False) -> List[Dict[str, float]]:
+        """Harvest completed in-flight steps (oldest first).  With
+        ``block=True``, waits for the head step if nothing is ready yet —
+        the scheduler's no-busy-spin fallback.
+
+        ``step_s`` is measured from max(dispatch, previous step's observed
+        completion): steps within a block form a serial chain, so counting
+        each one from its own dispatch would bill the wait behind its
+        predecessor twice at dispatch depth > 1 (inflating EWMA/straggler/
+        chip-second accounting by ~the window depth)."""
+        out: List[Dict[str, float]] = []
+        while self._inflight:
+            t0, token = self._inflight[0]
+            if block and not out:
+                jax.block_until_ready(token)
+            is_ready = getattr(token, "is_ready", None)
+            if is_ready is not None and not is_ready():
+                break
+            self._inflight.popleft()
+            now = time.perf_counter()
+            out.append({"step_s": now - max(t0, self._last_ready_t)})
+            self._last_ready_t = now
+        return out
+
+    def drain(self) -> List[Dict[str, float]]:
+        """Block until every in-flight step has completed."""
+        out: List[Dict[str, float]] = []
+        while self._inflight:
+            out.extend(self.poll(block=True))
+        return out
 
     # ----------------------------------------------------------- persist
     def save(self, async_: bool = True) -> None:

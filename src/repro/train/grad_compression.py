@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
+
 
 def quantize(g, *, bits: int = 8):
     """Per-tensor symmetric absmax quantization -> (int8 codes, scale)."""
@@ -68,6 +70,38 @@ def compressed_psum_pod(grads, err, mesh: Mesh, pod_axis: str = "pod"):
     out = [one(g, e) for g, e in zip(flat_g, flat_e)]
     return (jax.tree.unflatten(treedef, [o[0] for o in out]),
             jax.tree.unflatten(treedef, [o[1] for o in out]))
+
+
+@functools.lru_cache(maxsize=64)
+def _compressed_allreduce_fn(mesh: Mesh, pod_axis: str, n_leaves: int):
+    """Jitted shard-mapped reducer, cached by (mesh, axis, leaf count) so
+    per-step calls hit the jit cache instead of retracing."""
+    spec = tuple(P(pod_axis) for _ in range(n_leaves))
+
+    @functools.partial(shard_map, mesh=mesh, in_specs=(spec, spec),
+                       out_specs=(spec, spec), axis_names={pod_axis})
+    def _run(gs, es):
+        red, new = compressed_psum_pod(list(gs), list(es), mesh, pod_axis)
+        return tuple(red), tuple(new)
+
+    return jax.jit(_run)
+
+
+def compressed_allreduce(grads, err, mesh: Mesh, pod_axis: str = "pod"):
+    """Convenience wrapper: run ``compressed_psum_pod`` inside a partial-auto
+    ``shard_map`` (manual over ``pod_axis``, GSPMD-auto elsewhere).
+
+    grads/err: pytrees of *global* arrays whose leading dim is sharded over
+    ``pod_axis``.  Returns (pod-mean grads, new error-feedback tree) with the
+    same global layout.  The shard-mapped body is jitted because partial-auto
+    shard_map requires a surrounding jit on jax<=0.4.
+    """
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err)
+    fn = _compressed_allreduce_fn(mesh, pod_axis, len(flat_g))
+    red, new = fn(tuple(flat_g), tuple(flat_e))
+    return (jax.tree.unflatten(treedef, list(red)),
+            jax.tree.unflatten(treedef, list(new)))
 
 
 def init_error_feedback(params):

@@ -1,0 +1,157 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+Property-test modules import ``given``/``settings``/``st`` from here instead
+of from ``hypothesis`` directly.  With hypothesis installed (see
+requirements-dev.txt) they get the real thing; without it they fall back to
+a small seeded example-drawing shim so the suite still collects and the
+properties still run against boundary values plus deterministic random
+draws (seeded per test, so failures reproduce).
+"""
+try:
+    from hypothesis import given, settings, strategies
+    st = strategies
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import inspect
+    import random
+    import zlib
+
+    DEFAULT_MAX_EXAMPLES = 25
+
+    class _Strategy:
+        def example(self, rng):
+            raise NotImplementedError
+
+        def boundaries(self):
+            """Deterministic edge-case examples drawn before random ones."""
+            return []
+
+    class _Integers(_Strategy):
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def example(self, rng):
+            return rng.randint(self.lo, self.hi)
+
+        def boundaries(self):
+            return [self.lo, self.hi]
+
+    class _Floats(_Strategy):
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def example(self, rng):
+            return rng.uniform(self.lo, self.hi)
+
+        def boundaries(self):
+            return [self.lo, self.hi]
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, elements):
+            self.elements = list(elements)
+
+        def example(self, rng):
+            return rng.choice(self.elements)
+
+        def boundaries(self):
+            return [self.elements[0], self.elements[-1]]
+
+    class _Lists(_Strategy):
+        def __init__(self, elem, min_size=0, max_size=None):
+            self.elem = elem
+            self.min_size = min_size
+            self.max_size = max_size if max_size is not None else min_size + 10
+
+        def example(self, rng):
+            n = rng.randint(self.min_size, self.max_size)
+            return [self.elem.example(rng) for _ in range(n)]
+
+        def boundaries(self):
+            b = self.elem.boundaries() or [None]
+            return [[b[0]] * self.min_size if b[0] is not None else []]
+
+    class _Tuples(_Strategy):
+        def __init__(self, *elems):
+            self.elems = elems
+
+        def example(self, rng):
+            return tuple(e.example(rng) for e in self.elems)
+
+        def boundaries(self):
+            bs = [e.boundaries() for e in self.elems]
+            if all(bs):
+                return [tuple(b[0] for b in bs), tuple(b[-1] for b in bs)]
+            return []
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Floats(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(elements):
+            return _SampledFrom(elements)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=None, **_kw):
+            return _Lists(elements, min_size, max_size)
+
+        @staticmethod
+        def tuples(*elements):
+            return _Tuples(*elements)
+
+    strategies = st = _Strategies()
+
+    class settings:
+        """Decorator stub: records max_examples for the ``given`` wrapper."""
+
+        def __init__(self, max_examples=DEFAULT_MAX_EXAMPLES, deadline=None,
+                     **_kw):
+            self.max_examples = max_examples
+
+        def __call__(self, fn):
+            fn._compat_max_examples = self.max_examples
+            return fn
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            # hypothesis binds positional strategies to the rightmost params
+            pos_names = ([p.name for p in params][len(params)
+                                                  - len(arg_strategies):]
+                         if arg_strategies else [])
+            strat_map = dict(zip(pos_names, arg_strategies))
+            strat_map.update(kw_strategies)
+
+            def wrapper(*args, **kwargs):
+                n = getattr(fn, "_compat_max_examples", DEFAULT_MAX_EXAMPLES)
+                seed = zlib.crc32(
+                    f"{fn.__module__}.{fn.__qualname__}".encode())
+                rng = random.Random(seed)
+                for i in range(max(1, n)):
+                    drawn = {}
+                    for name, s in strat_map.items():
+                        b = s.boundaries()
+                        drawn[name] = b[i] if i < len(b) else s.example(rng)
+                    fn(*args, **kwargs, **drawn)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__module__ = fn.__module__
+            wrapper.__doc__ = fn.__doc__
+            # hide strategy-bound params so pytest doesn't treat them as
+            # fixtures (explicit __signature__ wins over __wrapped__)
+            wrapper.__signature__ = sig.replace(
+                parameters=[p for p in params if p.name not in strat_map])
+            if hasattr(fn, "pytestmark"):
+                wrapper.pytestmark = fn.pytestmark
+            return wrapper
+
+        return deco

@@ -3,7 +3,7 @@ lifecycle state machine, interference model, monitor."""
 import time
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import interference
 from repro.core.block import Block, BlockGrant, BlockRequest, BlockState

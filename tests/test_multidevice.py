@@ -137,21 +137,27 @@ def test_grad_compression_shard_map():
     import jax, jax.numpy as jnp, numpy as np
     from functools import partial
     from jax.sharding import Mesh, PartitionSpec as P
+    from repro.compat import shard_map
     from repro.train import grad_compression as gc
 
     mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
     g = jax.random.normal(jax.random.PRNGKey(0), (2, 64))  # per-pod grads
 
-    @partial(jax.shard_map, mesh=mesh, in_specs=P("pod"), out_specs=P("pod"),
+    @partial(shard_map, mesh=mesh, in_specs=P("pod"), out_specs=P("pod"),
              axis_names={"pod"})   # manual over pod, GSPMD-auto elsewhere
     def compressed(gp):
         err = jnp.zeros_like(gp)
         red, _ = gc.compressed_psum_pod({"g": gp}, {"g": err}, mesh, "pod")
         return red["g"]
 
-    got = compressed(g)
+    got = jax.jit(compressed)(g)   # partial-auto requires jit on jax<=0.4
     want = jnp.broadcast_to(g.mean(0, keepdims=True), g.shape)
     np.testing.assert_allclose(got, want, atol=0.05)
+
+    red, new_err = gc.compressed_allreduce(
+        {"g": g}, {"g": jnp.zeros_like(g)}, mesh, "pod")
+    np.testing.assert_allclose(red["g"], want, atol=0.05)
+    assert new_err["g"].shape == g.shape
     print("COMPRESS_OK")
     """, devices=8)
     assert "COMPRESS_OK" in out

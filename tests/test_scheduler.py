@@ -1,0 +1,315 @@
+"""BlockScheduler: admission waitlist, fair-share ordering, dispatch
+backpressure, plus the previously-untested tick() auto-expire and
+inject_chip_failure -> recover_block paths."""
+import time
+
+import jax
+import pytest
+
+from repro.core.block import BlockState
+from repro.core.controller import ClusterController
+from repro.core.partition import AllocationError, Partitioner
+from repro.core.scheduler import SimRuntime, drive
+from repro.core.topology import Topology
+
+
+def make_ctl(tmp_path, pod_x=2, pod_y=2):
+    """In-process controller: the single real CPU device stands in for every
+    chip (fine for admission/queueing logic, which never builds a mesh)."""
+    topo = Topology(n_pods=1, pod_x=pod_x, pod_y=pod_y)
+    dev = jax.devices()[0]
+    return ClusterController(topo, devices=[dev] * topo.n_chips,
+                             ckpt_root=str(tmp_path / "ckpt"))
+
+
+# ------------------------------------------------------------- partitioner
+
+def test_retag_is_atomic_rename():
+    part = Partitioner(Topology(n_pods=1, pod_x=2, pod_y=2))
+    coords = part.allocate(4, "tmp_id")
+    assert part.retag("tmp_id", "blk_real") == 4
+    assert all(part.owner_of(c) == "blk_real" for c in coords)
+    assert part.release("tmp_id") == 0          # old id owns nothing
+    assert part.release("blk_real") == 4
+
+
+def test_can_fit_and_free_capacity():
+    part = Partitioner(Topology(n_pods=1, pod_x=4, pod_y=2))
+    assert part.free_capacity() == 8
+    assert part.can_fit(8)
+    part.allocate(4, "a")          # takes a 2x2 corner; a 2x2 region remains
+    assert part.free_capacity() == 4
+    assert part.can_fit(4) and not part.can_fit(8)
+    assert not part.can_fit(3)     # 3 needs a 3x1 run; free region is 2x2
+    part.release("a")
+    assert part.can_fit(3)
+
+
+# --------------------------------------------------------------- admission
+
+def test_submit_queues_instead_of_raising(tmp_path):
+    ctl = make_ctl(tmp_path)                    # 4 chips
+    a1, g1 = ctl.submit("alice", "train", 4)
+    assert g1 is not None
+    a2, g2 = ctl.submit("bob", "train", 4)      # oversubscribed
+    assert g2 is None
+    assert ctl.registry.get(a2).state == BlockState.QUEUED
+    assert ctl.registry.queued() == [a2]
+    assert ctl.scheduler.queue_depth() == 1
+    assert ctl.monitor.queue_report()["depth"] == 1
+    # the raise-on-full path still exists at the partitioner layer
+    with pytest.raises(AllocationError):
+        ctl.partitioner.allocate(4, "direct")
+
+
+def test_waitlist_admitted_on_expiry(tmp_path):
+    ctl = make_ctl(tmp_path)
+    a1, g1 = ctl.submit("alice", "train", 4)
+    a2, g2 = ctl.submit("bob", "train", 4)
+    assert g2 is None
+    ctl.registry.get(a1).grant.expires_at = time.time() - 1
+    expired = ctl.tick()
+    assert expired == [a1]
+    blk2 = ctl.registry.get(a2)
+    assert blk2.state == BlockState.APPROVED and blk2.grant is not None
+    assert blk2.grant.n_chips == 4
+    rep = ctl.monitor.queue_report()
+    assert rep["depth"] == 0 and rep["admitted_total"] == 1
+    assert rep["max_wait_s"] >= 0.0
+    assert rep["utilization_now"] == 1.0        # bob now holds all 4 chips
+
+
+def test_fair_share_prefers_user_holding_fewer_chips(tmp_path):
+    ctl = make_ctl(tmp_path, pod_x=4, pod_y=2)  # 8 chips
+    a1, _ = ctl.submit("alice", "j", 4)         # alice holds 4
+    b1, _ = ctl.submit("bob", "j", 4)           # bob holds 4 -> pod full
+    a2, g = ctl.submit("alice", "more", 4)      # queued first
+    b2, g2 = ctl.submit("bob", "more", 4)       # queued second
+    assert g is None and g2 is None
+    ctl.expire(b1)                              # bob now holds 0, 4 free
+    # fair share: bob's entry (0 held) is admitted ahead of alice's (4 held)
+    # despite alice's earlier enqueue
+    assert ctl.registry.get(b2).state == BlockState.APPROVED
+    assert ctl.registry.get(a2).state == BlockState.QUEUED
+
+
+def test_priority_beats_fair_share(tmp_path):
+    ctl = make_ctl(tmp_path, pod_x=4, pod_y=2)
+    a1, _ = ctl.submit("alice", "j", 4)
+    b1, _ = ctl.submit("bob", "j", 4)
+    b2, _ = ctl.submit("bob", "urgent", 4, priority=5)
+    a2, _ = ctl.submit("alice", "more", 4)
+    ctl.expire(a1)                              # alice holds 0, bob holds 4
+    # priority 5 wins even though bob holds more chips and enqueued... first
+    assert ctl.registry.get(b2).state == BlockState.APPROVED
+    assert ctl.registry.get(a2).state == BlockState.QUEUED
+
+
+def test_queue_drains_in_order_as_capacity_frees(tmp_path):
+    ctl = make_ctl(tmp_path, pod_x=4, pod_y=2)
+    a1, _ = ctl.submit("alice", "j", 8)         # whole pod
+    b1, g = ctl.submit("bob", "big", 8)         # queued
+    c1, g2 = ctl.submit("carol", "small", 2)    # queued behind bob
+    assert g is None and g2 is None
+    ctl.registry.get(a1).grant.expires_at = time.time() - 1
+    ctl.tick()                                  # 8 free: bob admitted first
+    assert ctl.registry.get(b1).state == BlockState.APPROVED
+    assert ctl.registry.get(c1).state == BlockState.QUEUED  # no room left
+    ctl.expire(b1)                              # carol admitted on release
+    assert ctl.registry.get(c1).state == BlockState.APPROVED
+
+
+def test_backfill_small_fits_while_large_waits(tmp_path):
+    ctl = make_ctl(tmp_path, pod_x=4, pod_y=2)
+    a1, _ = ctl.submit("alice", "j", 4)         # 4 free remain
+    b1, g = ctl.submit("bob", "big", 8)         # can never fit now -> queued
+    c1, g2 = ctl.submit("carol", "small", 2)    # fits: backfilled past bob
+    assert g is None
+    assert g2 is not None
+    assert ctl.registry.get(c1).state == BlockState.APPROVED
+    assert ctl.registry.get(b1).state == BlockState.QUEUED
+
+
+def test_impossible_requests_denied_not_queued(tmp_path):
+    """A request that can never fit the pod geometry (too big, zero, or
+    negative) is denied at submission, not waitlisted forever."""
+    ctl = make_ctl(tmp_path)                    # 2x2 pod, 4 chips
+    for n in (32, 3, 0, -1):                    # 3 has no shape on a 2x2 pod
+        app, g = ctl.submit("greedy", f"ask {n}", n)
+        assert g is None
+        assert ctl.registry.get(app).state == BlockState.DENIED
+    assert ctl.scheduler.queue_depth() == 0
+    ctl.tick()                                  # nothing to pump, no raise
+
+
+def test_expired_or_denied_queued_app_is_pruned(tmp_path):
+    """Regression: a QUEUED app that is force-expired or denied must leave
+    the waitlist; admitting it later would be an illegal transition and
+    would leak the chips allocated before the approve raised."""
+    ctl = make_ctl(tmp_path)
+    a1, _ = ctl.submit("alice", "j", 4)
+    a2, g = ctl.submit("bob", "j", 4)
+    a3, g2 = ctl.submit("carol", "j", 4)
+    assert g is None and g2 is None
+    ctl.expire(a2)                              # bob gives up while queued
+    ctl.registry.deny(a3, "admin denied")       # carol rejected by admin
+    assert ctl.scheduler.queue_depth() == 0
+    assert ctl.monitor.queue_report()["depth"] == 0
+    ctl.registry.get(a1).grant.expires_at = time.time() - 1
+    ctl.tick()                                  # must not raise or leak
+    assert ctl.registry.get(a2).state == BlockState.EXPIRED
+    assert ctl.registry.get(a3).state == BlockState.DENIED
+    assert ctl.partitioner.free_capacity() == 4  # nothing leaked
+
+
+# --------------------------------------------------------------- dispatch
+
+class CountingRuntime:
+    """Fake runtime recording the deepest in-flight window it ever saw."""
+
+    def __init__(self):
+        self.inflight = 0
+        self.max_seen = 0
+        self.done = 0
+
+    @property
+    def inflight_depth(self):
+        return self.inflight
+
+    def oldest_dispatch_t(self):
+        return 0.0 if self.inflight else float("inf")
+
+    def dispatch(self):
+        self.inflight += 1
+        self.max_seen = max(self.max_seen, self.inflight)
+
+    def poll(self, block=False):
+        if self.inflight:
+            self.inflight -= 1
+            self.done += 1
+            return [{"step_s": 1e-4}]
+        return []
+
+
+def test_double_review_raises_without_leaking_chips(tmp_path):
+    """Regression: review() of an already-approved app must fail the state
+    transition AND give the freshly-allocated chips back."""
+    ctl = make_ctl(tmp_path)
+    a1 = ctl.register("alice", "j", 2)
+    ctl.review(a1)
+    with pytest.raises(ValueError):
+        ctl.review(a1)
+    assert ctl.partitioner.free_capacity() == 2    # only the first grant held
+
+
+def test_step_time_not_inflated_by_dispatch_depth():
+    """Regression: at depth 2 each step's step_s must not include the wait
+    behind its predecessor (would double-bill chip_seconds/EWMA)."""
+    rt = SimRuntime(0.010)
+    out = drive({"b": rt}, {"b": 10}, max_inflight=2)["b"]
+    total = sum(r["step_s"] for r in out)
+    assert 0.095 <= total <= 0.125, total           # ~10 x 10ms, not ~2x
+
+
+def test_dispatch_backpressure_cap():
+    rts = {"a": CountingRuntime(), "b": CountingRuntime()}
+    out = drive(rts, {"a": 10, "b": 7}, max_inflight=2)
+    assert len(out["a"]) == 10 and len(out["b"]) == 7
+    assert rts["a"].max_seen <= 2 and rts["b"].max_seen <= 2
+    assert rts["a"].done == 10
+
+
+def test_run_dispatch_feeds_monitor(tmp_path):
+    ctl = make_ctl(tmp_path)
+    a1, g1 = ctl.submit("alice", "j", 2)
+    ctl.confirm(a1, g1.token)
+    ctl.registry.set_state(a1, BlockState.ACTIVE)
+    ctl.registry.set_state(a1, BlockState.RUNNING)
+    ctl.runtimes[a1] = SimRuntime(0.001)
+    out = ctl.step_all(rounds=3)
+    assert len(out[a1]) == 3
+    bid = ctl.registry.get(a1).block_id
+    assert ctl.monitor.stats[bid].steps == 3
+    assert ctl.monitor.stats[bid].chip_seconds > 0
+
+
+def test_slow_block_does_not_stall_fast_blocks():
+    """3 fast blocks (10ms) + 1 slow (40ms); fast blocks need 8 steps, slow
+    needs 2 (equal compute).  Event-driven wall-clock beats the old
+    fixed-order round-robin emulation."""
+    def mk():
+        return {"f0": SimRuntime(0.010), "f1": SimRuntime(0.010),
+                "f2": SimRuntime(0.010), "slow": SimRuntime(0.040)}
+
+    targets = {"f0": 8, "f1": 8, "f2": 8, "slow": 2}
+
+    rts = mk()
+    t0 = time.perf_counter()
+    out = drive(rts, targets, max_inflight=2)
+    t_event = time.perf_counter() - t0
+    assert {a: len(v) for a, v in out.items()} == targets
+
+    # old step_all: rounds of dispatch-all then fixed-order blocking waits;
+    # every round is gated by the slowest still-active block
+    rts = mk()
+    remaining = dict(targets)
+    t0 = time.perf_counter()
+    while any(remaining.values()):
+        active = [a for a, n in remaining.items() if n > 0]
+        for a in active:
+            rts[a].dispatch()
+            remaining[a] -= 1
+        for a in active:
+            rts[a].poll(block=True)
+    t_rr = time.perf_counter() - t0
+
+    # event: max chain = 80ms; round-robin: 2*40ms + 6*10ms = 140ms
+    assert t_event < t_rr, (t_event, t_rr)
+
+
+# ------------------------------------------- tick / failure-recovery paths
+
+def test_tick_auto_expires_past_blocks(tmp_path):
+    ctl = make_ctl(tmp_path)
+    a1, g1 = ctl.submit("alice", "j", 4)
+    assert ctl.tick() == []                     # nothing expired yet
+    ctl.registry.get(a1).grant.expires_at = time.time() - 1
+    assert ctl.tick() == [a1]
+    assert ctl.registry.get(a1).state == BlockState.EXPIRED
+    assert ctl.partitioner.free_capacity() == 4
+    assert ctl.tick() == []                     # idempotent
+    assert len(ctl.monitor.util_samples) == 3
+
+
+@pytest.mark.slow
+def test_inject_chip_failure_recovers_block(tmp_path):
+    """Previously untested end-to-end path: chip failure -> FAILED ->
+    re-carve -> checkpoint restore -> RUNNING (on the real BlockRuntime,
+    single-device 1-chip block)."""
+    import repro.configs as C
+    from repro.core.runtime import JobSpec
+    from repro.models.config import ShapeConfig
+    from repro.train.optimizer import OptConfig
+
+    ctl = make_ctl(tmp_path)
+    shape = ShapeConfig("t", "train", seq_len=16, global_batch=2,
+                        microbatch=1)
+    job = JobSpec(C.get_smoke("xlstm_350m"), shape,
+                  opt=OptConfig(warmup_steps=1, total_steps=8))
+    a1, g1 = ctl.submit("alice", "train", 1, job=job)
+    assert ctl.registry.get(a1).state == BlockState.RUNNING
+    ctl.step_all(rounds=2)
+    rt = ctl.runtimes[a1]
+    assert rt.step_count == 2
+    rt.save(async_=False)
+
+    failed = ctl.inject_chip_failure(g1.coords[0])
+    assert failed == a1
+    blk = ctl.registry.get(a1)
+    assert blk.state == BlockState.RUNNING          # recovered + resumed
+    assert blk.grant.coords != g1.coords            # re-carved elsewhere
+    assert blk.grant.block_id == g1.block_id        # same identity
+    assert ctl.runtimes[a1].step_count == 2         # restored from ckpt
+    ctl.step_all(rounds=1)
+    assert ctl.runtimes[a1].step_count == 3
+    ctl.partitioner.check_invariants()
