@@ -5,6 +5,7 @@
   §4      multi-block overhead on real jobs    -> benchmarks/multiblock_overhead.py
   (assignment) roofline table per cell         -> benchmarks/roofline_report.py
   (scheduler) event-driven vs round-robin      -> benchmarks/scheduler_throughput.py
+  (scheduler) preemptive vs wait-for-expiry    -> benchmarks/preemption_latency.py
 
 Prints ``name,us_per_call,derived`` CSV.  Subprocesses own the multi-device
 XLA flag so this process (and pytest) keep a single device.
@@ -60,6 +61,8 @@ def main() -> None:
     run_sub("roofline_report.py", devices=1)
     print("# --- scheduler: event-driven dispatch vs round-robin ---")
     run_sub("scheduler_throughput.py", devices=1)
+    print("# --- scheduler: preemptive admission vs wait-for-expiry ---")
+    run_sub("preemption_latency.py", devices=1)
 
 
 if __name__ == "__main__":

@@ -107,8 +107,13 @@ class CheckpointManager:
         """Restore into the structure of ``like_tree``.
 
         ``shardings``: optional pytree (same structure) of NamedShardings —
-        leaves are re-placed with them, enabling restore onto a *different*
-        mesh than the one that saved (elastic resize / block migration).
+        leaves are re-placed with them, enabling *cross-geometry* restore:
+        checkpoints hold full (unsharded) host leaves, so a block saved on
+        one mesh can be restored onto a different chip set, device count or
+        mesh shape (elastic resize / failure migration / preemption resume)
+        — each leaf is resharded onto the target mesh by ``device_put``.
+        Logical leaf *shapes* must match the manifest; only placement may
+        differ.
         """
         step = step if step is not None else self.latest_step()
         if step is None:
@@ -121,11 +126,20 @@ class CheckpointManager:
             raise ValueError(
                 f"checkpoint has {len(manifest['leaves'])} leaves, "
                 f"expected {len(leaves)}")
-        shard_leaves = (jax.tree.leaves(shardings, is_leaf=lambda x: x is None
-                                        or hasattr(x, "device_set"))
+        # flatten shardings against like_tree's structure, so a None in a
+        # leaf position means "default placement" while empty subtrees
+        # (e.g. a model with no decode cache) can never shift the pairing
+        shard_leaves = (treedef.flatten_up_to(shardings)
                         if shardings is not None else [None] * len(leaves))
         out = []
         for meta, like, shd in zip(manifest["leaves"], leaves, shard_leaves):
+            like_shape = list(getattr(like, "shape", []) or [])
+            if like_shape != meta["shape"]:
+                raise ValueError(
+                    f"{meta['file']}: checkpoint leaf shape {meta['shape']} "
+                    f"!= target shape {like_shape} — cross-geometry restore "
+                    f"reshards placement onto a new mesh, it cannot change "
+                    f"logical shapes (did the model config change?)")
             arr = np.load(os.path.join(path, meta["file"]))
             if verify:
                 crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())

@@ -4,7 +4,36 @@ A *block* = an admin-assigned, disjoint set of chips + its own parallel
 runtime configuration ("MPD ring" in the paper: per-user daemon + config
 files).  Here: BlockRequest (the user's application), BlockGrant (the
 admin's assignment: chip coords, mesh shape, capability token) and the
-lifecycle state machine of Fig. 2 of the paper.
+lifecycle state machine of Fig. 2 of the paper, extended with the
+admission waitlist (QUEUED) and checkpoint-backed preemption (PREEMPTED).
+
+Lifecycle state machine::
+
+    REQUESTED --> DENIED
+        |  \\
+        |   +--> QUEUED ----------> DENIED | EXPIRED
+        v           |
+    APPROVED <------+
+        |  \\
+        |   +--> DENIED | EXPIRED
+        v
+    CONFIRMED --> EXPIRED
+        |
+        v
+      ACTIVE <------------------+----------------+
+        |  \\                    |                |
+        |   +--> EXPIRED|FAILED |                | resume (re-grant,
+        v                       |                |  possibly different
+      RUNNING --> DONE --> EXPIRED               |  chips / mesh shape)
+        |   \\                                   |
+        |    +--> FAILED --> ACTIVE (recover)    |
+        v                                        |
+    PREEMPTED (drained + checkpointed, chips released) --> EXPIRED
+        ^
+        '-- scheduler evicts a lower-priority running block so a
+            higher-priority waiter can be admitted; the victim re-enters
+            the waitlist ahead of its fair-share class and is auto-resumed
+            by ``tick()`` when capacity frees.
 """
 from __future__ import annotations
 
@@ -12,7 +41,7 @@ import dataclasses
 import enum
 import secrets
 import time
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.topology import Coord
 
@@ -24,6 +53,8 @@ class BlockState(str, enum.Enum):
     CONFIRMED = "confirmed"       # (3) user reconfirmed the assignment
     ACTIVE = "active"             # (3b) nodes powered, daemons up (runtime built)
     RUNNING = "running"           # (5) program uploaded and executing
+    PREEMPTED = "preempted"       # (5b) evicted for a higher-priority block:
+                                  #      drained, checkpointed, chips released
     DONE = "done"                 # (7) finished, results downloadable
     EXPIRED = "expired"           # usage period over, nodes shut down
     FAILED = "failed"             # chip failure / fatal error
@@ -40,9 +71,11 @@ TRANSITIONS = {
                           BlockState.EXPIRED},
     BlockState.CONFIRMED: {BlockState.ACTIVE, BlockState.EXPIRED},
     BlockState.ACTIVE: {BlockState.RUNNING, BlockState.EXPIRED,
-                        BlockState.FAILED},
+                        BlockState.FAILED, BlockState.PREEMPTED},
     BlockState.RUNNING: {BlockState.DONE, BlockState.FAILED,
-                         BlockState.EXPIRED, BlockState.ACTIVE},
+                         BlockState.EXPIRED, BlockState.ACTIVE,
+                         BlockState.PREEMPTED},
+    BlockState.PREEMPTED: {BlockState.ACTIVE, BlockState.EXPIRED},
     BlockState.FAILED: {BlockState.ACTIVE, BlockState.EXPIRED},
     BlockState.DONE: {BlockState.EXPIRED, BlockState.RUNNING},
 }
@@ -57,6 +90,7 @@ class BlockRequest:
     shape: str = "train_4k"           # input-shape cell
     duration_s: float = 3600.0        # requested usage period
     priority: int = 0                 # admission priority (higher = sooner)
+    pod: Optional[int] = None         # admin pod pinning (None = any pod)
 
 
 @dataclasses.dataclass
@@ -92,6 +126,24 @@ class Block:
     result_path: Optional[str] = None
     failure_reason: Optional[str] = None
     queued_at: Optional[float] = None   # when the app entered the waitlist
+    # checkpoint-backed preemption bookkeeping (persisted by the Registry):
+    # one record per eviction with the victim's progress state at that moment
+    preemptions: List[Dict] = dataclasses.field(default_factory=list)
+
+    @property
+    def preempt_count(self) -> int:
+        return len(self.preemptions)
+
+    def record_preemption(self, reason: str, progress_lost_steps: int,
+                          checkpoint_step: Optional[int],
+                          from_state: str) -> None:
+        self.preemptions.append({
+            "t": time.time(),
+            "reason": reason,
+            "progress_lost_steps": int(progress_lost_steps),
+            "checkpoint_step": checkpoint_step,
+            "from_state": from_state,    # resume returns the block here
+        })
 
     def transition(self, new_state: BlockState, note: str = "") -> None:
         if new_state not in TRANSITIONS.get(self.state, set()):

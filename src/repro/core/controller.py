@@ -11,6 +11,13 @@ Fault tolerance: chip-failure injection marks chips unhealthy, fails the
 owning block, re-carves a fresh sub-mesh from the free pool and restores the
 block's state from its checkpoint namespace.  Elastic resize uses the same
 re-carve + reshard-restore path.
+
+Preemption: ``preempt`` suspends a running block (drain → synchronous
+checkpoint → release chips under the partitioner lock) and re-enters it on
+the waitlist ahead of its fair-share class; ``resume`` re-grants chips
+(possibly a different set / geometry) and restores from the checkpoint.
+``tick()`` drives auto-resume as capacity frees.  The scheduler invokes the
+same pair automatically when a strictly-higher-priority waiter can't fit.
 """
 from __future__ import annotations
 
@@ -137,7 +144,9 @@ class ClusterController:
 
     def expire(self, app_id: str) -> None:
         """Usage period over: shut nodes down, free the block, and admit
-        whatever the freed capacity now fits from the waitlist."""
+        whatever the freed capacity now fits from the waitlist.  (A block
+        whose period ends while PREEMPTED holds no chips — it simply never
+        resumes.)"""
         blk = self.registry.get(app_id)
         if blk.grant:
             self.partitioner.release(blk.grant.block_id)
@@ -145,9 +154,73 @@ class ClusterController:
         self.registry.set_state(app_id, BlockState.EXPIRED, "period over")
         self.scheduler.pump()
 
+    # ------------------------------------------------------- preemption
+    def preempt(self, app_id: str, reason: str = "admin preempt") -> None:
+        """Evict a running/active block: drain its in-flight dispatches,
+        checkpoint synchronously (suspend), release its chips — the
+        partitioner's lock makes the release atomic w.r.t. concurrent
+        allocates — and park it on the waitlist (PREEMPTED) ahead of its
+        fair-share class for auto-resume."""
+        blk = self.registry.get(app_id)
+        # validate before any irreversible step: suspend/release must not
+        # run if the PREEMPTED transition would be rejected afterwards
+        if blk.state not in (BlockState.RUNNING, BlockState.ACTIVE):
+            raise ValueError(
+                f"cannot preempt {app_id} in state {blk.state.value}")
+        assert blk.grant is not None, f"{app_id} holds no grant"
+        rt = self.runtimes.get(app_id)
+        # progress measured *before* the suspend-save: what a non-graceful
+        # kill would have lost, and what victim selection minimized
+        progress_lost = int(getattr(rt, "progress_lost", 0) or 0)
+        info = rt.suspend() if rt is not None else {}
+        self.partitioner.release(blk.grant.block_id)
+        seq = self.registry.mark_preempted(
+            app_id, reason, progress_lost_steps=progress_lost,
+            checkpoint_step=(int(info["step"]) if info else None))
+        self.monitor.record_preemption(blk.block_id, progress_lost)
+        self.scheduler.requeue_preempted(app_id, seq)
+
+    def resume(self, app_id: str,
+               n_chips: Optional[int] = None) -> BlockGrant:
+        """Re-admit a PREEMPTED block: carve a fresh sub-mesh (possibly
+        different chips; pass ``n_chips`` to resume on a different
+        geometry), rebuild the runtime there and restore from the
+        checkpoint.  Keeps the block's identity, token and expiry.  Raises
+        AllocationError — holding nothing — when the pod can't fit it yet
+        (the scheduler then keeps it queued)."""
+        blk = self.registry.get(app_id)
+        assert blk.state == BlockState.PREEMPTED, (app_id, blk.state)
+        assert blk.grant is not None
+        old = blk.grant
+        n = n_chips or old.n_chips
+        coords = self.partitioner.allocate(n, old.block_id,
+                                           pod=blk.request.pod)
+        new_grant = BlockGrant(block_id=old.block_id, coords=coords,
+                               mesh_shape=mesh_shape_for(n),
+                               token=old.token, expires_at=old.expires_at)
+        rt = self.runtimes.get(app_id)
+        if rt is not None:
+            try:
+                rt.resume(new_grant, self.devices_for(coords))
+            except Exception:
+                self.partitioner.release(old.block_id)
+                raise
+        blk.grant = new_grant
+        self.registry.set_state(
+            app_id, BlockState.ACTIVE,
+            f"resumed on {n} chips at step "
+            f"{rt.step_count if rt is not None else 0}")
+        # return to the pre-preemption lifecycle position: a block that was
+        # only ACTIVE (user never started the job) must not come back RUNNING
+        if blk.preemptions and blk.preemptions[-1].get("from_state") == \
+                BlockState.RUNNING.value:
+            self.registry.set_state(app_id, BlockState.RUNNING, "resumed")
+        return new_grant
+
     def tick(self, now: Optional[float] = None) -> List[str]:
         """Periodic housekeeping: auto-expire blocks past their period,
-        admit from the waitlist, sample pod utilization."""
+        admit from the waitlist (including auto-resume of preempted
+        blocks), sample pod utilization."""
         expired = self.registry.expired(now)
         for app_id in expired:
             self.expire(app_id)

@@ -35,7 +35,16 @@ class Monitor:
         self.enqueued_total = 0
         self.admitted_total = 0
         self.queue_waits: List[float] = []       # seconds queued per admission
+        # admission waits split by priority class, so the scheduler's
+        # preemption win (high-priority wait-time delta) is observable
+        self.queue_waits_by_class: Dict[str, List[float]] = {
+            "high": [], "normal": []}
         self.util_samples: List[float] = []      # fraction of chips in use
+        # preemption accounting (controller.preempt / scheduler feed these)
+        self.preempted_total = 0
+        self.resumed_total = 0
+        self.progress_lost_steps: List[int] = []  # per eviction, pre-save
+        self.resume_waits: List[float] = []       # seconds evicted->resumed
 
     def _get(self, block_id: str) -> BlockStats:
         with self._lock:
@@ -73,13 +82,57 @@ class Monitor:
         with self._lock:
             self.queue_depth = max(0, self.queue_depth - 1)
 
-    def record_admission(self, app_id: str, wait_s: float) -> None:
+    def record_admission(self, app_id: str, wait_s: float,
+                         priority: int = 0) -> None:
         with self._lock:
             self.queue_depth = max(0, self.queue_depth - 1)
             self.admitted_total += 1
             self.queue_waits.append(wait_s)
             if len(self.queue_waits) > 2048:
                 self.queue_waits = self.queue_waits[-1024:]
+            cls = "high" if priority > 0 else "normal"
+            waits = self.queue_waits_by_class[cls]
+            waits.append(wait_s)
+            if len(waits) > 2048:
+                self.queue_waits_by_class[cls] = waits[-1024:]
+
+    # ------------------------------------------------------------ preemption
+    def record_preemption(self, block_id: str,
+                          progress_lost_steps: int) -> None:
+        with self._lock:
+            self.preempted_total += 1
+            self.progress_lost_steps.append(int(progress_lost_steps))
+            if len(self.progress_lost_steps) > 2048:
+                self.progress_lost_steps = self.progress_lost_steps[-1024:]
+
+    def record_resume(self, app_id: str, wait_s: float) -> None:
+        with self._lock:
+            self.resumed_total += 1
+            self.resume_waits.append(wait_s)
+            if len(self.resume_waits) > 2048:
+                self.resume_waits = self.resume_waits[-1024:]
+
+    def preemption_report(self) -> Dict[str, float]:
+        """Eviction counts, victim progress-lost bounds, and the
+        high-priority admission-wait delta preemption buys."""
+        with self._lock:
+            lost = self.progress_lost_steps
+            hi = self.queue_waits_by_class["high"]
+            lo = self.queue_waits_by_class["normal"]
+            p50_hi = statistics.median(hi) if hi else 0.0
+            p50_lo = statistics.median(lo) if lo else 0.0
+            return {
+                "preempted_total": self.preempted_total,
+                "resumed_total": self.resumed_total,
+                "mean_progress_lost_steps": (statistics.mean(lost)
+                                             if lost else 0.0),
+                "max_progress_lost_steps": max(lost) if lost else 0,
+                "mean_resume_wait_s": (statistics.mean(self.resume_waits)
+                                       if self.resume_waits else 0.0),
+                "p50_wait_high_s": p50_hi,
+                "p50_wait_normal_s": p50_lo,
+                "wait_delta_s": p50_lo - p50_hi,
+            }
 
     def sample_utilization(self, used_chips: int, total_chips: int) -> None:
         with self._lock:

@@ -131,6 +131,27 @@ class Partitioner:
             except AllocationError:
                 return False
 
+    def can_fit_excluding(self, n_chips: int, freed_block_ids: Sequence[str],
+                          pod: Optional[int] = None) -> bool:
+        """Preemption what-if: would ``allocate`` succeed if these blocks'
+        chips were freed first?  Temporarily clears their ownership under
+        the lock and restores it before returning — the inventory is
+        unchanged when this returns."""
+        with self._lock:
+            saved: Dict[Coord, str] = {}
+            freed = set(freed_block_ids)
+            for c, info in self.chips.items():
+                if info.owner in freed:
+                    saved[c] = info.owner
+                    info.owner = None
+            try:
+                return self._find_rect(n_chips, pod) is not None
+            except AllocationError:
+                return False
+            finally:
+                for c, owner in saved.items():
+                    self.chips[c].owner = owner
+
     def shape_possible(self, n_chips: int) -> bool:
         """Could this request *ever* fit (valid size with a rectangular
         shape inside one pod)?  False means waitlisting it is pointless."""

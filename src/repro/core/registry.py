@@ -10,11 +10,18 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import tempfile
 import threading
 import time
 from typing import Dict, List, Optional
 
 from repro.core.block import Block, BlockGrant, BlockRequest, BlockState
+
+# process umask, read once at import: os.umask(0)/os.umask(x) probing on
+# every persist would leave a window where concurrent writers (e.g. the
+# checkpoint manager's background thread) create world-writable files
+_UMASK = os.umask(0)
+os.umask(_UMASK)
 
 
 class Registry:
@@ -52,6 +59,26 @@ class Registry:
         with self._lock:
             blk = self.apps[app_id]
             blk.transition(BlockState.QUEUED, note)
+            blk.queued_at = time.time()
+            self._queue_seq += 1
+            self._queue_order[app_id] = self._queue_seq
+            self._persist()
+            return self._queue_order[app_id]
+
+    def mark_preempted(self, app_id: str, note: str,
+                       progress_lost_steps: int = 0,
+                       checkpoint_step: Optional[int] = None) -> int:
+        """Record an eviction: transition to PREEMPTED, append to the
+        persisted preemption history, and re-enter the admission queue
+        (preempted blocks keep their FIFO position machinery so the
+        scheduler can order them for auto-resume).  Returns the new
+        queue sequence number."""
+        with self._lock:
+            blk = self.apps[app_id]
+            from_state = blk.state.value
+            blk.transition(BlockState.PREEMPTED, note)
+            blk.record_preemption(note, progress_lost_steps, checkpoint_step,
+                                  from_state)
             blk.queued_at = time.time()
             self._queue_seq += 1
             self._queue_order[app_id] = self._queue_seq
@@ -109,7 +136,7 @@ class Registry:
                     if b.grant and now > b.grant.expires_at
                     and b.state in (BlockState.APPROVED, BlockState.CONFIRMED,
                                     BlockState.ACTIVE, BlockState.RUNNING,
-                                    BlockState.DONE)]
+                                    BlockState.DONE, BlockState.PREEMPTED)]
 
     # -------------------------------------------------------------- persist
     def _persist(self) -> None:
@@ -130,9 +157,30 @@ class Registry:
                 "history": blk.history[-20:],
                 "failure": blk.failure_reason,
                 "queued_at": blk.queued_at,
+                "preempt_count": blk.preempt_count,
+                "preemptions": blk.preemptions[-20:],
             }
-        os.makedirs(os.path.dirname(self.state_path) or ".", exist_ok=True)
-        tmp = self.state_path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(snap, f, indent=1, default=str)
-        os.replace(tmp, self.state_path)
+        target_dir = os.path.dirname(self.state_path) or "."
+        os.makedirs(target_dir, exist_ok=True)
+        # Crash-safe write: unique temp file in the *same directory* (so the
+        # rename cannot cross filesystems), fsync before the atomic
+        # os.replace — a crash at any point leaves either the old state file
+        # or the new one, never a truncated mix.  A fixed ".tmp" name would
+        # also let two writers clobber each other's half-written file.
+        fd, tmp = tempfile.mkstemp(prefix=".registry_", suffix=".tmp",
+                                   dir=target_dir)
+        try:
+            # mkstemp creates 0600; restore umask-default permissions so
+            # the external UI/CLI this file exists for can still read it
+            os.fchmod(fd, 0o666 & ~_UMASK)
+            with os.fdopen(fd, "w") as f:
+                json.dump(snap, f, indent=1, default=str)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self.state_path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise

@@ -5,13 +5,19 @@ devices, compiles the job's step function with the block's parallelism plan,
 and installs sharded state.  Each block's runtime is fully independent of
 every other block's (separate mesh, separate compiled executables, separate
 checkpoint namespace) — the multi-daemon isolation property of the paper.
+
+Preemption support: ``suspend()`` drains the in-flight window, writes a
+synchronous checkpoint and drops every device reference, so the chips can
+be re-granted to another block; ``resume(grant, devices)`` rebuilds the
+runtime on a possibly *different* chip set / mesh geometry and restores the
+suspended state from the checkpoint (host leaves are resharded onto the new
+mesh by the checkpoint manager).
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import time
-from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +26,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.core.block import BlockGrant
+from repro.core.inflight import InflightWindow
 from repro.data import pipeline
 from repro.models import model as model_lib
 from repro.models.config import ModelConfig, ShapeConfig
@@ -39,26 +46,32 @@ class JobSpec:
     seed: int = 0
 
 
-class BlockRuntime:
+class BlockRuntime(InflightWindow):
     def __init__(self, grant: BlockGrant, job: JobSpec,
                  devices: Sequence[jax.Device], ckpt_root: str):
+        self.job = job
+        self.ckpt = CheckpointManager(ckpt_root, namespace=grant.block_id)
+        self.state: Any = None
+        self.cache: Any = None
+        self.step_count = 0
+        self.last_saved_step = 0     # step_count at the last checkpoint
+        self.suspended = False
+        self._init_window()
+        self._attach(grant, devices)
+
+    def _attach(self, grant: BlockGrant,
+                devices: Sequence[jax.Device]) -> None:
+        """Bind to a chip set: build the sub-mesh and (re)compile the step
+        function.  Called at activation and again on resume-after-preemption
+        (possibly with different chips / a different mesh geometry)."""
         assert len(devices) == int(np.prod(grant.mesh_shape)), (
             len(devices), grant.mesh_shape)
         self.grant = grant
-        self.job = job
         self.devices = list(devices)
         self.mesh = Mesh(np.asarray(self.devices).reshape(grant.mesh_shape),
                          ("data", "model"))
         self.axes = plans.MeshAxes(dp=("data",), model="model")
         self.ctx = shard_ctx.ShardCtx(self.mesh, ("data",), "model")
-        self.ckpt = CheckpointManager(ckpt_root, namespace=grant.block_id)
-        self.state: Any = None
-        self.cache: Any = None
-        self.step_count = 0
-        # in-flight dispatch window: (dispatch wall-time, ready token) per
-        # async step not yet observed complete
-        self._inflight: Deque[Tuple[float, Any]] = collections.deque()
-        self._last_ready_t = 0.0
         self._build()
 
     # ------------------------------------------------------------ compile
@@ -153,74 +166,126 @@ class BlockRuntime:
         return metrics
 
     # ------------------------------------------------- in-flight dispatch
-    @property
-    def inflight_depth(self) -> int:
-        return len(self._inflight)
-
-    def oldest_dispatch_t(self) -> float:
-        """Dispatch wall-time of the oldest in-flight step (the scheduler
-        blocks on the runtime with the smallest value when every window is
-        full).  +inf when nothing is in flight."""
-        return self._inflight[0][0] if self._inflight else float("inf")
-
-    def dispatch(self) -> None:
-        """Dispatch one async step and track its completion token.  The
-        scheduler caps how many of these are outstanding per block
-        (dispatch-depth backpressure) so host runahead stays bounded."""
-        t0 = time.perf_counter()
+    # window bookkeeping (dispatch/poll/drain/inflight_depth) lives in
+    # InflightWindow; a step's completion token is a device array whose
+    # readiness signals the whole step finished
+    def _launch(self):
         self.step_async()
-        token = (jax.tree.leaves(self.state)[0]
-                 if self.job.kind == "train" else self.token)
-        self._inflight.append((t0, token))
+        return (jax.tree.leaves(self.state)[0]
+                if self.job.kind == "train" else self.token)
 
-    def poll(self, block: bool = False) -> List[Dict[str, float]]:
-        """Harvest completed in-flight steps (oldest first).  With
-        ``block=True``, waits for the head step if nothing is ready yet —
-        the scheduler's no-busy-spin fallback.
+    def _token_ready(self, token) -> bool:
+        is_ready = getattr(token, "is_ready", None)
+        return is_ready is None or is_ready()
 
-        ``step_s`` is measured from max(dispatch, previous step's observed
-        completion): steps within a block form a serial chain, so counting
-        each one from its own dispatch would bill the wait behind its
-        predecessor twice at dispatch depth > 1 (inflating EWMA/straggler/
-        chip-second accounting by ~the window depth)."""
-        out: List[Dict[str, float]] = []
-        while self._inflight:
-            t0, token = self._inflight[0]
-            if block and not out:
-                jax.block_until_ready(token)
-            is_ready = getattr(token, "is_ready", None)
-            if is_ready is not None and not is_ready():
-                break
-            self._inflight.popleft()
-            now = time.perf_counter()
-            out.append({"step_s": now - max(t0, self._last_ready_t)})
-            self._last_ready_t = now
-        return out
-
-    def drain(self) -> List[Dict[str, float]]:
-        """Block until every in-flight step has completed."""
-        out: List[Dict[str, float]] = []
-        while self._inflight:
-            out.extend(self.poll(block=True))
-        return out
+    def _token_wait(self, token) -> None:
+        jax.block_until_ready(token)
 
     # ----------------------------------------------------------- persist
-    def save(self, async_: bool = True) -> None:
+    def _decode_ctx(self) -> Dict[str, Any]:
+        """A serve block's generation context — without it a restored
+        decoder would silently restart from an empty cache at position 0."""
+        return {"cache": self.cache, "token": self.token,
+                "cache_len": self.cache_len}
+
+    def _abstract_like(self) -> Dict[str, Any]:
+        """Restore targets without materializing state on device (resume
+        path: a full random init just to overwrite it would put a model-init
+        compile on the preemption-resume critical path)."""
+        job = self.job
+        if job.kind == "train":
+            return train_lib.abstract_train_state(job.cfg, job.opt)
+        return {"params": model_lib.abstract_params(job.cfg)}
+
+    def _payload(self) -> Dict[str, Any]:
         payload = {"state": self.state, "step_count": self.step_count}
+        if self.job.kind == "serve":
+            payload["decode"] = self._decode_ctx()
+        return payload
+
+    def save(self, async_: bool = True) -> None:
+        payload = self._payload()
         if async_:
             self.ckpt.save_async(self.step_count, payload)
         else:
             self.ckpt.save(self.step_count, payload)
+        self.last_saved_step = self.step_count
+
+    @property
+    def progress_lost(self) -> int:
+        """Steps of work beyond the last checkpoint — what a *non-graceful*
+        eviction of this block would throw away.  The scheduler's victim
+        selection minimizes this (suspend() itself checkpoints, so graceful
+        preemption loses nothing; the metric bounds the drain/save cost and
+        the loss if the host dies mid-suspend)."""
+        return max(0, self.step_count - self.last_saved_step)
+
+    def suspend(self) -> Dict[str, float]:
+        """Preemption: drain in-flight dispatches, checkpoint synchronously,
+        and drop every device reference so the chips can be re-granted.
+        The runtime object survives (job spec + checkpoint namespace) and
+        can be rebuilt on any chip set with ``resume``."""
+        drained = self.drain()
+        self.ckpt.wait()                 # an async save may still be landing
+        self.save(async_=False)
+        self.state = None
+        self.cache = None
+        if self.job.kind == "serve":
+            self.token = None
+            self.cache_len = None
+        self._step = None
+        self.mesh = None
+        self.devices = []
+        self.suspended = True
+        return {"step": self.step_count, "drained_steps": len(drained)}
+
+    def resume(self, grant: BlockGrant,
+               devices: Sequence[jax.Device]) -> int:
+        """Rebuild after preemption on ``devices`` (possibly different chips
+        and/or a different mesh geometry than suspend-time) and restore the
+        checkpointed state, resharded onto the new mesh.  Returns the step
+        the block resumed at."""
+        assert self.suspended, "resume() is only legal after suspend()"
+        self._attach(grant, devices)
+        # no init_state(): restore targets are abstract (shape/dtype), so
+        # resume skips the model-init compile entirely
+        at = self.restore()
+        self.suspended = False
+        return at
 
     def restore(self, step: Optional[int] = None) -> int:
-        like = {"state": self.state, "step_count": self.step_count}
-        shardings = {"state": self.state_shardings
-                     if self.job.kind == "train"
-                     else self.state_shardings, "step_count": None}
+        like = {"state": (self.state if self.state is not None
+                          else self._abstract_like()),
+                "step_count": self.step_count}
+        shardings = {"state": self.state_shardings, "step_count": None}
+        if self.job.kind == "serve":
+            decode_like = (self._decode_ctx() if self.cache is not None
+                           else self._abstract_decode())
+            like["decode"] = decode_like
+            # decode context restores to default placement (the same the
+            # init path uses); None per leaf keeps the trees congruent
+            shardings["decode"] = jax.tree.map(lambda _: None, decode_like)
         restored, at = self.ckpt.restore(like, step=step, shardings=shardings)
         self.state = restored["state"]
+        if self.job.kind == "serve":
+            dec = restored["decode"]
+            self.cache = dec["cache"]
+            self.token = dec["token"]
+            self.cache_len = dec["cache_len"]
         self.step_count = int(restored["step_count"])
+        self.last_saved_step = self.step_count   # state == checkpoint now
         return at
+
+    def _abstract_decode(self) -> Dict[str, Any]:
+        # eval_shape: shape/dtype targets only — materializing a real cache
+        # here would double peak device memory on the resume critical path
+        shape = self.job.shape
+        return jax.eval_shape(lambda: {
+            "cache": model_lib.init_cache(self.job.cfg, shape.global_batch,
+                                          shape.seq_len),
+            "token": jnp.zeros((shape.global_batch, 1), jnp.int32),
+            "cache_len": jnp.int32(0),
+        })
 
     @classmethod
     def rebuild(cls, old: "BlockRuntime", grant: BlockGrant,

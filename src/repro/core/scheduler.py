@@ -25,8 +25,19 @@ Two subsystems fix that:
   when every window is full and nothing is ready.  A slow block therefore
   never stalls a fast block's next dispatch on the host thread.
 
+* **Checkpoint-backed preemption** — when a waitlisted entry outranks a
+  running block (strictly higher priority) and no free rectangle fits it,
+  ``pump()`` picks a victim by (priority asc, progress-lost = steps since
+  its last checkpoint asc, held chips asc), suspends it (drain in-flight →
+  synchronous checkpoint → release chips) and admits the waiter.  The
+  victim re-enters the waitlist *ahead of its fair-share class* and is
+  auto-resumed by ``tick()`` — on a possibly different chip set / mesh
+  geometry — as capacity frees.  The strict-priority requirement is the
+  no-churn guard: two equal-priority blocks can never evict each other in
+  a loop.
+
 ``SimRuntime`` is a wall-clock model of a block's serial step chain used
-by the scheduler benchmark and tests (no devices required).
+by the scheduler benchmarks and tests (no devices required).
 """
 from __future__ import annotations
 
@@ -35,6 +46,7 @@ import time
 from typing import Callable, Dict, List, Mapping, Optional, Union
 
 from repro.core.block import BlockGrant, BlockState
+from repro.core.inflight import InflightWindow
 from repro.core.partition import AllocationError
 
 
@@ -48,6 +60,7 @@ class QueueEntry:
     seq: int                          # registry FIFO sequence number
     pod: Optional[int] = None
     job: Optional[object] = None      # JobSpec -> auto activate+run on admit
+    preempted: bool = False           # evicted victim awaiting auto-resume
 
 
 # ----------------------------------------------------------------- dispatch
@@ -98,9 +111,11 @@ def drive(runtimes: Mapping[str, object], targets: Mapping[str, int],
 class BlockScheduler:
     """Admission queue + dispatch loop over a ClusterController."""
 
-    def __init__(self, ctl, max_inflight: int = 2):
+    def __init__(self, ctl, max_inflight: int = 2,
+                 preemption_enabled: bool = True):
         self.ctl = ctl
         self.max_inflight = max_inflight
+        self.preemption_enabled = preemption_enabled
         self.waitlist: Dict[str, QueueEntry] = {}   # app_id -> entry
 
     # ------------------------------------------------------------ admission
@@ -121,11 +136,18 @@ class BlockScheduler:
             self.ctl.registry.deny(
                 app_id, f"{blk.request.n_chips} chips can never fit this pod")
             return None
+        # persist overrides onto the request: after admission the request is
+        # the canonical record, and preemption (victim selection, requeue)
+        # must see the same priority/pod that admission used
+        if priority is not None:
+            blk.request.priority = priority
+        if pod is not None:
+            blk.request.pod = pod
         entry = QueueEntry(
             app_id=app_id, user=blk.request.user,
             n_chips=blk.request.n_chips,
-            priority=(blk.request.priority if priority is None else priority),
-            enqueued_at=time.time(), seq=0, pod=pod, job=job)
+            priority=blk.request.priority,
+            enqueued_at=time.time(), seq=0, pod=blk.request.pod, job=job)
         # admit the existing waitlist first so a newcomer can't jump a
         # higher-ranked entry that also fits
         self.pump()
@@ -158,14 +180,33 @@ class BlockScheduler:
         return held
 
     def ordered_waitlist(self) -> List[QueueEntry]:
-        """Fair-share admission order: priority desc, then fewest chips the
-        user currently holds, then FIFO."""
+        """Fair-share admission order: priority desc, then preempted victims
+        ahead of their fair-share class (they already earned their slot once
+        and paid an eviction), then fewest chips the user currently holds,
+        then FIFO."""
         held = self._held_chips_by_user()
         return sorted(self.waitlist.values(),
-                      key=lambda e: (-e.priority, held.get(e.user, 0), e.seq))
+                      key=lambda e: (-e.priority, not e.preempted,
+                                     held.get(e.user, 0), e.seq))
+
+    def requeue_preempted(self, app_id: str, seq: int) -> None:
+        """Park an evicted block on the waitlist for auto-resume (the
+        registry has already transitioned it to PREEMPTED and assigned the
+        queue sequence number)."""
+        blk = self.ctl.registry.get(app_id)
+        self.waitlist[app_id] = QueueEntry(
+            app_id=app_id, user=blk.request.user,
+            n_chips=blk.grant.n_chips if blk.grant else blk.request.n_chips,
+            priority=blk.request.priority, enqueued_at=blk.queued_at,
+            seq=seq, pod=blk.request.pod, preempted=True)
+        self.ctl.monitor.record_enqueue(app_id)
 
     def _try_admit(self, entry: QueueEntry) -> Optional[BlockGrant]:
         try:
+            if entry.preempted:
+                # victim re-admission: restore, don't re-grant — the block
+                # keeps its identity/token and resumes from its checkpoint
+                return self.ctl.resume(entry.app_id)
             grant = self.ctl.grant_block(entry.app_id, entry.n_chips,
                                          pod=entry.pod)
         except AllocationError:
@@ -177,18 +218,24 @@ class BlockScheduler:
         return grant
 
     def _prune_waitlist(self) -> None:
-        """Drop entries whose application left the QUEUED state behind the
-        scheduler's back (admin deny, forced expiry): admitting them would
-        be an illegal transition and would leak their chips."""
-        for app_id in list(self.waitlist):
-            if self.ctl.registry.get(app_id).state != BlockState.QUEUED:
+        """Drop entries whose application left the QUEUED (or, for evicted
+        victims, PREEMPTED) state behind the scheduler's back (admin deny,
+        forced expiry): admitting them would be an illegal transition and
+        would leak their chips."""
+        for app_id, entry in list(self.waitlist.items()):
+            expect = (BlockState.PREEMPTED if entry.preempted
+                      else BlockState.QUEUED)
+            if self.ctl.registry.get(app_id).state != expect:
                 del self.waitlist[app_id]
                 self.ctl.monitor.record_dequeue(app_id)
 
     def pump(self, now: Optional[float] = None) -> List[str]:
         """Admit waitlisted applications that now fit, in fair-share order
-        (with backfill past entries that still don't fit).  Called from
-        ``tick()`` and after every expiry/shrink."""
+        (with backfill past entries that still don't fit).  When nothing
+        fits and preemption is enabled, evict the cheapest sufficient set
+        of strictly-lower-priority running blocks per round to make room
+        for the best-ranked waiter.  Called from ``tick()`` and after
+        every expiry/shrink."""
         admitted: List[str] = []
         now = now or time.time()
         self._prune_waitlist()
@@ -201,13 +248,79 @@ class BlockScheduler:
                 if grant is None:
                     continue
                 del self.waitlist[entry.app_id]
-                self.ctl.monitor.record_admission(
-                    entry.app_id, max(0.0, now - entry.enqueued_at))
+                wait_s = max(0.0, now - entry.enqueued_at)
+                self.ctl.monitor.record_admission(entry.app_id, wait_s,
+                                                  priority=entry.priority)
+                if entry.preempted:
+                    self.ctl.monitor.record_resume(entry.app_id, wait_s)
                 admitted.append(entry.app_id)
                 progress = True
                 break    # holdings changed: recompute fair-share order
+            if not progress and self.preemption_enabled:
+                progress = self._preempt_for_waiters()
             if not progress:
                 return admitted
+
+    # ----------------------------------------------------------- preemption
+    def _preempt_for_waiters(self) -> bool:
+        """Evict running block(s) so the best-ranked waiter that cannot
+        currently fit gets room.  Returns True when victims were suspended
+        (the caller's next fair-share pass then admits the waiter)."""
+        for entry in self.ordered_waitlist():
+            victims = self._select_victims(entry)
+            if not victims:
+                continue
+            for victim in victims:
+                self.ctl.preempt(
+                    victim, reason=f"evicted for {entry.app_id} "
+                                   f"(priority {entry.priority})")
+            return True
+        return False
+
+    def _select_victims(self, entry: QueueEntry) -> List[str]:
+        """Victim choice for ``entry``: among running/active blocks of
+        *strictly* lower priority (the no-churn guard — equal-priority
+        blocks can never evict each other in a loop), ranked by (priority,
+        progress-lost = steps since the victim's last checkpoint, held
+        chips) — least important, cheapest-to-stop, smallest first.  Prefer
+        a single victim whose chips let the entry fit; a waiter whose
+        footprint spans several smaller blocks gets the shortest rank-order
+        prefix of victims that frees enough contiguous room.  Returns []
+        (and nothing is evicted) when even the full eligible set would not
+        make the entry fit."""
+        reg = self.ctl.registry
+        part = self.ctl.partitioner
+        eligible = []
+        for app_id in reg.by_state(BlockState.RUNNING, BlockState.ACTIVE):
+            blk = reg.get(app_id)
+            if blk.grant is None or blk.request.priority >= entry.priority:
+                continue
+            rt = self.ctl.runtimes.get(app_id)
+            progress_lost = int(getattr(rt, "progress_lost", 0) or 0)
+            eligible.append((blk.request.priority, progress_lost,
+                             blk.grant.n_chips, app_id, blk.grant.block_id))
+        eligible.sort()
+        for _, _, _, app_id, block_id in eligible:
+            if part.can_fit_excluding(entry.n_chips, [block_id], entry.pod):
+                return [app_id]
+        chosen: List[str] = []
+        freed: List[str] = []
+        for _, _, _, app_id, block_id in eligible:
+            chosen.append(app_id)
+            freed.append(block_id)
+            if part.can_fit_excluding(entry.n_chips, freed, entry.pod):
+                break
+        else:
+            return []
+        # prune: a rank-order prefix can include victims whose chips don't
+        # actually contribute to the fit (wrong pod / outside the found
+        # rectangle) — never evict a block the waiter doesn't need
+        for app_id, block_id in list(zip(chosen, freed))[:-1]:
+            without = [b for b in freed if b != block_id]
+            if part.can_fit_excluding(entry.n_chips, without, entry.pod):
+                chosen.remove(app_id)
+                freed.remove(block_id)
+        return chosen
 
     def queue_depth(self) -> int:
         self._prune_waitlist()
@@ -239,48 +352,67 @@ class BlockScheduler:
 
 
 # ---------------------------------------------------------------- simulation
-class SimRuntime:
+class SimRuntime(InflightWindow):
     """Wall-clock model of a block runtime: steps are serially dependent
     within the block (each becomes ready ``step_s`` after its predecessor)
     and concurrent across blocks — the paper's disjoint-sub-mesh model.
-    Implements both the in-flight window protocol (``dispatch``/``poll``/
-    ``inflight_depth``) and a synchronous ``step()`` for emulating the old
-    round-robin dispatcher."""
 
-    def __init__(self, step_s: float):
+    Shares the in-flight window protocol (``dispatch``/``poll``/``drain``)
+    with BlockRuntime via InflightWindow; a completion token here is the
+    model-time interval ``(start, ready_at)``.  Also models the preemption
+    surface — periodic checkpoints every ``ckpt_every`` steps feeding
+    ``progress_lost``, plus ``suspend``/``resume`` — so scheduler tests and
+    benchmarks exercise the full eviction path without devices."""
+
+    def __init__(self, step_s: float, ckpt_every: int = 0):
         self.step_s = step_s
         self.step_count = 0
-        self._inflight: List[tuple] = []   # (dispatch_t, start_t, ready_at)
+        self.ckpt_every = ckpt_every       # 0 = checkpoint only on suspend
+        self.last_saved_step = 0
+        self.suspended = False
         self._chain_free_at = 0.0          # when the serial chain is idle
+        self._init_window()
 
-    @property
-    def inflight_depth(self) -> int:
-        return len(self._inflight)
-
-    def oldest_dispatch_t(self) -> float:
-        return self._inflight[0][0] if self._inflight else float("inf")
-
-    def dispatch(self) -> None:
+    # --------------------------------------------- InflightWindow hooks
+    def _launch(self):
         now = time.perf_counter()
         start = max(now, self._chain_free_at)
         self._chain_free_at = start + self.step_s
-        self._inflight.append((now, start, self._chain_free_at))
+        return (start, self._chain_free_at)
 
-    def poll(self, block: bool = False) -> List[Dict[str, float]]:
-        out: List[Dict[str, float]] = []
-        while self._inflight:
-            t0, start, ready_at = self._inflight[0]
-            now = time.perf_counter()
-            if now < ready_at:
-                if not (block and not out):
-                    break
-                time.sleep(ready_at - now)
-            self._inflight.pop(0)
-            self.step_count += 1
-            # execution time only (not wait-behind-predecessor): the same
-            # chain accounting BlockRuntime.poll uses
-            out.append({"step_s": ready_at - start})
-        return out
+    def _token_ready(self, token) -> bool:
+        return time.perf_counter() >= token[1]
+
+    def _token_wait(self, token) -> None:
+        now = time.perf_counter()
+        if now < token[1]:
+            time.sleep(token[1] - now)
+
+    def _completion_record(self, dispatch_t: float, token) -> Dict[str, float]:
+        start, ready_at = token
+        self.step_count += 1
+        if self.ckpt_every and self.step_count % self.ckpt_every == 0:
+            self.last_saved_step = self.step_count   # periodic checkpoint
+        # model execution time only (not wait-behind-predecessor): the same
+        # serial-chain accounting BlockRuntime's completions use
+        return {"step_s": ready_at - start}
+
+    # ------------------------------------------------------- preemption
+    @property
+    def progress_lost(self) -> int:
+        return max(0, self.step_count - self.last_saved_step)
+
+    def suspend(self) -> Dict[str, float]:
+        drained = self.drain()
+        self.last_saved_step = self.step_count   # graceful synchronous save
+        self.suspended = True
+        return {"step": self.step_count, "drained_steps": len(drained)}
+
+    def resume(self, grant, devices) -> int:
+        assert self.suspended, "resume() is only legal after suspend()"
+        self.suspended = False
+        self._chain_free_at = 0.0
+        return self.step_count
 
     def step(self) -> Dict[str, float]:
         """Synchronous step (old round-robin semantics)."""

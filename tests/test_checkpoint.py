@@ -1,0 +1,101 @@
+"""CheckpointManager coverage: rotation honors keep=N, restore(step=None)
+picks the latest step, save_async + wait round-trips bit-identically, and
+the shape-mismatch guard for cross-geometry restores."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def tree_at(step):
+    """Distinct per-step content so 'which step restored' is observable."""
+    return {
+        "w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4) * step,
+        "b": {"bf16": jnp.full((5,), 1.5 * step, dtype=jnp.bfloat16),
+              "i": jnp.int32(step)},
+        "count": step,
+    }
+
+
+def assert_bit_identical(a, b):
+    xa = [np.asarray(l) for l in jax.tree_util.tree_leaves(a)]
+    xb = [np.asarray(l) for l in jax.tree_util.tree_leaves(b)]
+    assert len(xa) == len(xb)
+    for x, y in zip(xa, xb):
+        assert x.dtype == y.dtype and x.shape == y.shape
+        assert x.tobytes() == y.tobytes()
+
+
+def test_rotation_honors_keep(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), namespace="rot", keep=2)
+    for s in (1, 2, 3, 4, 5):
+        mgr.save(s, tree_at(s))
+    assert mgr.steps() == [4, 5]            # oldest steps deleted
+    for s in (1, 2, 3):
+        assert not os.path.exists(
+            os.path.join(mgr.dir, f"step_{s:08d}"))
+    # survivors still restore
+    restored, at = mgr.restore(tree_at(0), step=4)
+    assert at == 4 and restored["count"] == 4
+
+
+def test_restore_default_picks_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), namespace="latest", keep=5)
+    for s in (3, 7, 11):
+        mgr.save(s, tree_at(s))
+    restored, at = mgr.restore(tree_at(0), step=None)
+    assert at == 11
+    assert restored["count"] == 11
+    assert_bit_identical(restored, tree_at(11))
+    # explicit older step still reachable
+    restored7, at7 = mgr.restore(tree_at(0), step=7)
+    assert at7 == 7 and restored7["count"] == 7
+
+
+def test_save_async_wait_roundtrips_bit_identically(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), namespace="async", keep=3)
+    tree = tree_at(9)
+    mgr.save_async(9, tree)
+    mgr.wait()
+    restored, at = mgr.restore(tree_at(0))
+    assert at == 9
+    assert_bit_identical(restored, tree)
+    # bf16 logical dtype survives the byte-view serialization
+    assert restored["b"]["bf16"].dtype == jnp.bfloat16
+
+
+def test_save_async_back_to_back_serializes(tmp_path):
+    """A second save_async waits for the first; latest wins; no torn state."""
+    mgr = CheckpointManager(str(tmp_path), namespace="serial", keep=5)
+    for s in (1, 2, 3):
+        mgr.save_async(s, tree_at(s))
+    mgr.wait()
+    assert mgr.steps() == [1, 2, 3]
+    restored, at = mgr.restore(tree_at(0))
+    assert at == 3 and restored["count"] == 3
+
+
+def test_shape_mismatch_raises_informative(tmp_path):
+    """Cross-geometry restore reshards *placement*; a logical shape change
+    (different model config) must fail loudly, not silently truncate."""
+    mgr = CheckpointManager(str(tmp_path), namespace="shape")
+    mgr.save(1, {"w": jnp.zeros((3, 4))})
+    with pytest.raises(ValueError, match="cross-geometry"):
+        mgr.restore({"w": jnp.zeros((4, 4))})
+
+
+def test_leftover_tmp_dir_is_ignored(tmp_path):
+    """A crash mid-save leaves step_<n>.tmp; steps()/restore skip it and a
+    re-save of the same step replaces it."""
+    mgr = CheckpointManager(str(tmp_path), namespace="crash")
+    mgr.save(1, tree_at(1))
+    os.makedirs(os.path.join(mgr.dir, "step_00000002.tmp"))
+    assert mgr.steps() == [1]
+    restored, at = mgr.restore(tree_at(0))
+    assert at == 1
+    mgr.save(2, tree_at(2))
+    assert mgr.steps() == [1, 2]
