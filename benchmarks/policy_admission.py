@@ -1,0 +1,160 @@
+"""Tenancy policy vs. plain FIFO on an oversubscribed 6-user workload.
+
+Scenario A (deadline slack, ISSUE 3 acceptance): a 16-chip pod takes six
+4-chip jobs (24 > 16).  Four admit immediately; the last two queue.  The
+tight-deadline job is submitted *last*, so FIFO admits it last and it
+finishes past its SLO; with the policy's least-slack ordering it jumps the
+loose-deadline entry inside its fair-share class and finishes in time.
+Measures the completion-time deadline-miss rate in both modes (plus the
+Monitor's admission-slack accounting) — slack ordering must strictly
+reduce it.
+
+Scenario B (quota fairness): a hog submits two 8-chip jobs ahead of two
+small 4-chip users.  Without quotas the hog's jobs fill the pod and the
+small users wait a whole job duration; with a 8-chip cap the hog's second
+job is waitlisted (not denied) and the small users start immediately.
+
+Uses SimRuntime so the comparison isolates *scheduler* semantics from XLA
+noise.  Output follows the repo's benchmark CSV convention:
+name,us_per_call,derived.
+
+    PYTHONPATH=src python benchmarks/policy_admission.py
+"""
+import os
+import statistics
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.core.block import BlockState
+from repro.core.controller import ClusterController
+from repro.core.scheduler import SimRuntime
+from repro.core.topology import Topology
+
+STEP_S = 0.03
+
+
+def build(pod_x=4, pod_y=4):
+    topo = Topology(n_pods=1, pod_x=pod_x, pod_y=pod_y)
+    dev = jax.devices()[0]
+    return ClusterController(topo, devices=[dev] * topo.n_chips,
+                             ckpt_root="artifacts/policy_bench_ckpt")
+
+
+def run_workload(ctl, jobs):
+    """Drive submissions to completion.  ``jobs``: list of dicts with user,
+    n_chips, steps, deadline_s (optional).  Returns per-job dicts with
+    submitted/admitted/completed wall times."""
+    t0 = time.perf_counter()
+    info = {}
+    for spec in jobs:
+        app, grant = ctl.submit(spec["user"], spec["user"], spec["n_chips"],
+                                deadline_s=spec.get("deadline_s"),
+                                duration_s=60.0)
+        rec = {"app": app, "spec": spec,
+               "submitted": time.perf_counter() - t0,
+               "admitted": None, "completed": None}
+        info[app] = rec
+    while True:
+        for app, rec in info.items():
+            blk = ctl.registry.get(app)
+            if rec["admitted"] is None and blk.grant is not None and \
+                    blk.state == BlockState.APPROVED:
+                rec["admitted"] = time.perf_counter() - t0
+                ctl.confirm(app, blk.grant.token)
+                ctl.registry.set_state(app, BlockState.ACTIVE)
+                ctl.registry.set_state(app, BlockState.RUNNING)
+                ctl.runtimes[app] = SimRuntime(STEP_S)
+        running = ctl.registry.by_state(BlockState.RUNNING)
+        if running:
+            ctl.scheduler.run_dispatch({a: 1 for a in running})
+        for app, rec in info.items():
+            rt = ctl.runtimes.get(app)
+            blk = ctl.registry.get(app)
+            if rt is not None and blk.state == BlockState.RUNNING and \
+                    rt.step_count >= rec["spec"]["steps"]:
+                rec["completed"] = time.perf_counter() - t0
+                ctl.registry.set_state(app, BlockState.DONE)
+                ctl.expire(app)
+        ctl.tick()
+        if all(r["completed"] is not None for r in info.values()):
+            return list(info.values())
+
+
+def deadline_scenario(deadline_ordering: bool):
+    """6 users x 4 chips on 16: the tight-SLO job arrives last."""
+    ctl = build()
+    ctl.scheduler.policy.deadline_ordering = deadline_ordering
+    short, long_, queued = 5, 20, 10
+    jobs = [
+        {"user": "u0", "n_chips": 4, "steps": short, "deadline_s": 30.0},
+        {"user": "u1", "n_chips": 4, "steps": long_, "deadline_s": 30.0},
+        {"user": "u2", "n_chips": 4, "steps": long_, "deadline_s": 30.0},
+        {"user": "u3", "n_chips": 4, "steps": long_, "deadline_s": 30.0},
+        # both queue behind the four runners; FIFO admits u4 first
+        {"user": "u4", "n_chips": 4, "steps": queued, "deadline_s": 30.0},
+        {"user": "u5", "n_chips": 4, "steps": queued,
+         "deadline_s": (short + queued) * STEP_S + 0.20},   # tight SLO
+    ]
+    recs = run_workload(ctl, jobs)
+    misses = sum(1 for r in recs
+                 if r["spec"].get("deadline_s") is not None
+                 and r["completed"] - r["submitted"] >
+                 r["spec"]["deadline_s"])
+    return misses / len(recs), ctl.monitor.deadline_report()
+
+
+def quota_scenario(use_quota: bool):
+    """A hog's two 8-chip jobs vs two 4-chip small users."""
+    ctl = build()
+    if use_quota:
+        ctl.scheduler.policy.set_quota("hog", max_chips=8)
+    jobs = [
+        {"user": "hog", "n_chips": 8, "steps": 10},
+        {"user": "hog", "n_chips": 8, "steps": 10},
+        {"user": "sm1", "n_chips": 4, "steps": 5},
+        {"user": "sm2", "n_chips": 4, "steps": 5},
+    ]
+    recs = run_workload(ctl, jobs)
+    small_waits = [r["admitted"] - r["submitted"] for r in recs
+                   if r["spec"]["user"].startswith("sm")]
+    return statistics.mean(small_waits)
+
+
+def main():
+    miss_fifo, _ = deadline_scenario(deadline_ordering=False)
+    miss_slack, rep = deadline_scenario(deadline_ordering=True)
+    small_wait_noq = quota_scenario(use_quota=False)
+    small_wait_q = quota_scenario(use_quota=True)
+
+    print("name,us_per_call,derived")
+    print(f"deadline_miss_rate_fifo,0,{miss_fifo:.3f}")
+    print(f"deadline_miss_rate_slack,0,{miss_slack:.3f}")
+    print(f"monitor_deadline_miss_rate_slack,0,"
+          f"{rep['deadline_miss_rate']:.3f}")
+    print(f"monitor_min_admission_slack_s,0,"
+          f"{rep['min_admission_slack_s']:.3f}")
+    print(f"small_user_wait_no_quota_s,{small_wait_noq * 1e6:.0f},"
+          f"{small_wait_noq:.4f}")
+    print(f"small_user_wait_quota_s,{small_wait_q * 1e6:.0f},"
+          f"{small_wait_q:.4f}")
+    print(f"quota_fairness_wait_speedup,0,"
+          f"{small_wait_noq / max(small_wait_q, 1e-6):.1f}")
+
+    ok = True
+    if miss_slack >= miss_fifo:
+        print("WARNING: slack ordering did not strictly reduce the "
+              "deadline-miss rate vs FIFO", file=sys.stderr)
+        ok = False
+    if small_wait_q >= small_wait_noq:
+        print("WARNING: quota cap did not reduce small-user wait",
+              file=sys.stderr)
+        ok = False
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -6,10 +6,18 @@
   (assignment) roofline table per cell         -> benchmarks/roofline_report.py
   (scheduler) event-driven vs round-robin      -> benchmarks/scheduler_throughput.py
   (scheduler) preemptive vs wait-for-expiry    -> benchmarks/preemption_latency.py
+  (scheduler) policy vs FIFO admission         -> benchmarks/policy_admission.py
 
 Prints ``name,us_per_call,derived`` CSV.  Subprocesses own the multi-device
 XLA flag so this process (and pytest) keep a single device.
+
+``--json DIR`` additionally writes one ``BENCH_<section>.json`` per section
+(parsed rows + pass/fail) so CI can upload them as artifacts and the perf
+trajectory accumulates across PRs.  ``--only a,b`` runs a subset of
+sections (CI runs the cheap scheduler ones).
 """
+import argparse
+import json
 import os
 import subprocess
 import sys
@@ -18,22 +26,52 @@ HERE = os.path.dirname(os.path.abspath(__file__))
 SRC = os.path.join(HERE, "..", "src")
 
 
-def run_sub(script: str, devices: int) -> None:
+def parse_rows(lines):
+    rows = []
+    for line in lines:
+        line = line.strip()
+        if not line or line.startswith(("name,", "#")):
+            continue
+        parts = line.split(",")
+        if len(parts) == 3:
+            rows.append({"name": parts[0], "us_per_call": parts[1],
+                         "derived": parts[2]})
+    return rows
+
+
+def write_json(json_dir, section, rows, ok):
+    if not json_dir:
+        return
+    os.makedirs(json_dir, exist_ok=True)
+    path = os.path.join(json_dir, f"BENCH_{section}.json")
+    with open(path, "w") as f:
+        json.dump({"section": section, "ok": ok, "rows": rows}, f, indent=1)
+
+
+def run_sub(script: str, devices: int, json_dir=None) -> None:
+    section = os.path.splitext(script)[0]
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
     r = subprocess.run([sys.executable, os.path.join(HERE, script)],
                        env=env, capture_output=True, text=True, timeout=1800)
-    if r.returncode != 0:
+    if r.returncode != 0 and not r.stdout.strip():
         print(f"{script},0,FAILED")
         sys.stderr.write(r.stderr[-2000:])
+        write_json(json_dir, section, [], ok=False)
         return
-    for line in r.stdout.splitlines():
-        if line and not line.startswith("name,"):
-            print(line)
+    lines = [l for l in r.stdout.splitlines()
+             if l and not l.startswith("name,")]
+    for line in lines:
+        print(line)
+    if r.returncode != 0:
+        # partial rows + crash: still surface the failure in the CSV
+        print(f"{script},0,FAILED")
+        sys.stderr.write(r.stderr[-2000:])
+    write_json(json_dir, section, parse_rows(lines), ok=r.returncode == 0)
 
 
-def run_structural() -> None:
+def run_structural(json_dir=None) -> None:
     """Structural Fig. 3 model: contiguous TPU blocks share zero links."""
     sys.path.insert(0, SRC)
     from repro.core import interference
@@ -43,26 +81,55 @@ def run_structural() -> None:
     b = rect_coords(0, 8, 0, 8, 16)        # other half
     rows = interference.predicted_fig3(
         topo, a, b, [2 ** i for i in range(12, 26, 2)])
+    lines = []
     for r in rows:
-        print(f"fig3_struct_single_{r['bytes']},0,{r['bw_single_GBs']:.2f}")
-        print(f"fig3_struct_multi_{r['bytes']},0,{r['bw_multi_GBs']:.2f}")
-    print(f"fig3_struct_shared_links,0,{rows[0]['shared_links']}")
+        lines.append(f"fig3_struct_single_{r['bytes']},0,"
+                     f"{r['bw_single_GBs']:.2f}")
+        lines.append(f"fig3_struct_multi_{r['bytes']},0,"
+                     f"{r['bw_multi_GBs']:.2f}")
+    lines.append(f"fig3_struct_shared_links,0,{rows[0]['shared_links']}")
+    for line in lines:
+        print(line)
+    write_json(json_dir, "fig3_structural", parse_rows(lines), ok=True)
+
+
+SECTIONS = [
+    # (section key, header, script, device count)
+    ("fig3_structural", "Fig.3 structural (TPU torus link model)",
+     None, 0),
+    ("bisection", "Fig.3 measured (8 host devices, 2 blocks)",
+     "bisection.py", 8),
+    ("multiblock_overhead", "multi-block overhead on tenant train jobs",
+     "multiblock_overhead.py", 8),
+    ("roofline_report", "roofline table (from dry-run artifacts)",
+     "roofline_report.py", 1),
+    ("scheduler_throughput", "scheduler: event-driven dispatch vs round-robin",
+     "scheduler_throughput.py", 1),
+    ("preemption_latency", "scheduler: preemptive admission vs wait-for-expiry",
+     "preemption_latency.py", 1),
+    ("policy_admission", "scheduler: tenancy policy (quota/deadline/gang) vs FIFO",
+     "policy_admission.py", 1),
+]
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", metavar="DIR", default=None,
+                    help="write BENCH_<section>.json artifacts here")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated section keys to run")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
     print("name,us_per_call,derived")
-    print("# --- Fig.3 structural (TPU torus link model) ---")
-    run_structural()
-    print("# --- Fig.3 measured (8 host devices, 2 blocks) ---")
-    run_sub("bisection.py", devices=8)
-    print("# --- multi-block overhead on tenant train jobs ---")
-    run_sub("multiblock_overhead.py", devices=8)
-    print("# --- roofline table (from dry-run artifacts) ---")
-    run_sub("roofline_report.py", devices=1)
-    print("# --- scheduler: event-driven dispatch vs round-robin ---")
-    run_sub("scheduler_throughput.py", devices=1)
-    print("# --- scheduler: preemptive admission vs wait-for-expiry ---")
-    run_sub("preemption_latency.py", devices=1)
+    for key, header, script, devices in SECTIONS:
+        if only is not None and key not in only:
+            continue
+        print(f"# --- {header} ---")
+        if script is None:
+            run_structural(json_dir=args.json)
+        else:
+            run_sub(script, devices=devices, json_dir=args.json)
 
 
 if __name__ == "__main__":

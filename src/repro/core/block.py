@@ -33,7 +33,10 @@ Lifecycle state machine::
         '-- scheduler evicts a lower-priority running block so a
             higher-priority waiter can be admitted; the victim re-enters
             the waitlist ahead of its fair-share class and is auto-resumed
-            by ``tick()`` when capacity frees.
+            by ``tick()`` when capacity frees.  FAILED --> PREEMPTED covers
+            deferred recovery: a chip-failed block whose replacement
+            rectangle cannot be carved *right now* is checkpointed and
+            parked for auto-resume instead of dying FAILED holding nothing.
 """
 from __future__ import annotations
 
@@ -76,7 +79,8 @@ TRANSITIONS = {
                          BlockState.EXPIRED, BlockState.ACTIVE,
                          BlockState.PREEMPTED},
     BlockState.PREEMPTED: {BlockState.ACTIVE, BlockState.EXPIRED},
-    BlockState.FAILED: {BlockState.ACTIVE, BlockState.EXPIRED},
+    BlockState.FAILED: {BlockState.ACTIVE, BlockState.EXPIRED,
+                        BlockState.PREEMPTED},
     BlockState.DONE: {BlockState.EXPIRED, BlockState.RUNNING},
 }
 
@@ -91,6 +95,10 @@ class BlockRequest:
     duration_s: float = 3600.0        # requested usage period
     priority: int = 0                 # admission priority (higher = sooner)
     pod: Optional[int] = None         # admin pod pinning (None = any pod)
+    deadline_s: Optional[float] = None  # SLO: wanted done this many seconds
+                                        # after submission (None = no SLO)
+    gang_id: Optional[str] = None     # co-scheduled set this block belongs
+                                      # to (all-or-nothing admission)
 
 
 @dataclasses.dataclass
@@ -126,6 +134,8 @@ class Block:
     result_path: Optional[str] = None
     failure_reason: Optional[str] = None
     queued_at: Optional[float] = None   # when the app entered the waitlist
+    deadline_at: Optional[float] = None  # absolute SLO deadline, fixed at
+                                         # submission (deadline_s is relative)
     # checkpoint-backed preemption bookkeeping (persisted by the Registry):
     # one record per eviction with the victim's progress state at that moment
     preemptions: List[Dict] = dataclasses.field(default_factory=list)

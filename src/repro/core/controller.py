@@ -18,15 +18,21 @@ the waitlist ahead of its fair-share class; ``resume`` re-grants chips
 (possibly a different set / geometry) and restores from the checkpoint.
 ``tick()`` drives auto-resume as capacity frees.  The scheduler invokes the
 same pair automatically when a strictly-higher-priority waiter can't fit.
+
+Tenancy policy: the scheduler consults a ``SchedulingPolicy`` for per-user
+quotas, deadline-slack ordering and preferred-victim choice;
+``submit_gang``/``grant_gang`` admit multi-block jobs atomically
+(all-or-nothing) via ``Partitioner.allocate_many``.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 
 from repro.core import interference
-from repro.core.block import Block, BlockGrant, BlockRequest, BlockState
+from repro.core.block import (Block, BlockGrant, BlockRequest, BlockState,
+                              TRANSITIONS)
 from repro.core.monitor import Monitor
 from repro.core.partition import AllocationError, Partitioner, mesh_shape_for
 from repro.core.registry import Registry
@@ -59,23 +65,50 @@ class ClusterController:
     # -------------------------------------------------- workflow (Fig. 2)
     def register(self, user: str, job_description: str, n_chips: int,
                  arch: str = "", shape: str = "train_4k",
-                 duration_s: float = 3600.0, priority: int = 0) -> str:
+                 duration_s: float = 3600.0, priority: int = 0,
+                 deadline_s: Optional[float] = None) -> str:
         return self.registry.register(BlockRequest(
             user=user, job_description=job_description, n_chips=n_chips,
             arch=arch, shape=shape, duration_s=duration_s,
-            priority=priority))
+            priority=priority, deadline_s=deadline_s))
 
     def submit(self, user: str, job_description: str, n_chips: int,
                job: Optional[JobSpec] = None, priority: int = 0,
-               pod: Optional[int] = None, **register_kw):
+               pod: Optional[int] = None, now: Optional[float] = None,
+               **register_kw):
         """Automated admission (no admin in the loop): register and either
         admit now or waitlist until capacity frees.  Returns
         ``(app_id, grant-or-None)``; with a ``job`` the block is activated
-        and run the moment it is admitted."""
+        and run the moment it is admitted.  ``now`` keeps deadline/wait
+        accounting on the model clock under a simulated-clock driver."""
         app_id = self.register(user, job_description, n_chips,
                                priority=priority, **register_kw)
-        grant = self.scheduler.submit(app_id, job=job, pod=pod)
+        grant = self.scheduler.submit(app_id, job=job, pod=pod, now=now)
         return app_id, grant
+
+    def submit_gang(self, user: str, members: Sequence[Tuple],
+                    priority: int = 0, pod: Optional[int] = None,
+                    deadline_s: Optional[float] = None,
+                    now: Optional[float] = None, **register_kw):
+        """Atomic multi-block submission (paper follow-up arXiv:0708.3446:
+        jobs spanning several blocks at once).  ``members`` is a sequence of
+        ``(job_description, n_chips)`` or ``(job_description, n_chips,
+        JobSpec-or-None)`` tuples.  Every member is admitted together — all
+        co-start — or the whole gang is waitlisted as one unit.  Returns
+        ``(app_ids, {app_id: grant} or None)``."""
+        app_ids: List[str] = []
+        jobs: Dict[str, JobSpec] = {}
+        for member in members:
+            desc, n_chips = member[0], member[1]
+            job = member[2] if len(member) > 2 else None
+            app_id = self.register(user, desc, n_chips, priority=priority,
+                                   deadline_s=deadline_s, **register_kw)
+            app_ids.append(app_id)
+            if job is not None:
+                jobs[app_id] = job
+        grants = self.scheduler.submit_gang(app_ids, jobs=jobs, pod=pod,
+                                            now=now)
+        return app_ids, grants
 
     def grant_block(self, app_id: str, n_chips: int,
                     pod: Optional[int] = None) -> BlockGrant:
@@ -98,6 +131,60 @@ class ClusterController:
             self.partitioner.release(grant.block_id)
             raise
         return grant
+
+    def grant_gang(self, app_ids: Sequence[str]) -> Dict[str, BlockGrant]:
+        """Gang grant finalization: every member's rectangle is found under
+        ONE partitioner lock hold (``allocate_many``) and rolled back on
+        partial failure, so either every member gets a grant or the
+        inventory is bit-identical to before the call.  Member states are
+        validated up front so the post-allocation approve loop cannot fail
+        halfway through."""
+        for app_id in app_ids:
+            blk = self.registry.get(app_id)
+            if BlockState.APPROVED not in TRANSITIONS.get(blk.state, set()):
+                raise ValueError(
+                    f"gang member {app_id} in state {blk.state.value} "
+                    f"cannot be approved")
+        specs = [(self.registry.get(a).request.n_chips, f"pending_{a}",
+                  self.registry.get(a).request.pod) for a in app_ids]
+        alloc = self.partitioner.allocate_many(specs)
+        grants: Dict[str, BlockGrant] = {}
+        try:
+            for app_id in app_ids:
+                blk = self.registry.get(app_id)
+                coords = alloc[f"pending_{app_id}"]
+                grant = BlockGrant.new(coords, mesh_shape_for(len(coords)),
+                                       blk.request.duration_s)
+                self.partitioner.retag(f"pending_{app_id}", grant.block_id)
+                try:
+                    self.registry.approve(app_id, grant)
+                except Exception:
+                    self.partitioner.release(grant.block_id)
+                    raise
+                grants[app_id] = grant
+        except Exception:
+            # all-or-nothing extends to grant finalization: an approve that
+            # raises mid-loop (e.g. registry persist I/O error) must not
+            # leave earlier members holding chips or later members' pending
+            # reservations leaked.  Denies are best-effort (the registry's
+            # persist may be the very thing failing); chip release is what
+            # must never be skipped.
+            for a in app_ids:
+                self.partitioner.release(f"pending_{a}")
+            for a, g in grants.items():
+                self.partitioner.release(g.block_id)
+            for a in app_ids:
+                blk = self.registry.get(a)
+                # includes the member whose approve raised *after* its
+                # APPROVED transition: it must not stay APPROVED holding a
+                # grant whose chips were just released
+                if a in grants or blk.state == BlockState.APPROVED:
+                    try:
+                        self.registry.deny(a, "gang grant finalization failed")
+                    except Exception:
+                        pass
+            raise
+        return grants
 
     def review(self, app_id: str, *, approve: bool = True,
                pod: Optional[int] = None, n_chips: Optional[int] = None) -> Optional[BlockGrant]:
@@ -142,20 +229,28 @@ class ClusterController:
             "checkpoint_dir": rt.ckpt.dir if rt else None,
         }
 
-    def expire(self, app_id: str) -> None:
+    def expire(self, app_id: str, now: Optional[float] = None) -> None:
         """Usage period over: shut nodes down, free the block, and admit
         whatever the freed capacity now fits from the waitlist.  (A block
         whose period ends while PREEMPTED holds no chips — it simply never
-        resumes.)"""
+        resumes.)  The runtime is drained *before* its chips are released:
+        async dispatches could otherwise still be executing on chips the
+        next ``pump()`` hands to another block.  ``now`` (model time under
+        a simulated clock) flows through to the pump's wait accounting."""
         blk = self.registry.get(app_id)
+        rt = self.runtimes.pop(app_id, None)
+        if rt is not None:
+            drain = getattr(rt, "drain", None)
+            if drain is not None:
+                drain()
         if blk.grant:
             self.partitioner.release(blk.grant.block_id)
-        self.runtimes.pop(app_id, None)
         self.registry.set_state(app_id, BlockState.EXPIRED, "period over")
-        self.scheduler.pump()
+        self.scheduler.pump(now)
 
     # ------------------------------------------------------- preemption
-    def preempt(self, app_id: str, reason: str = "admin preempt") -> None:
+    def preempt(self, app_id: str, reason: str = "admin preempt",
+                now: Optional[float] = None) -> None:
         """Evict a running/active block: drain its in-flight dispatches,
         checkpoint synchronously (suspend), release its chips — the
         partitioner's lock makes the release atomic w.r.t. concurrent
@@ -176,7 +271,8 @@ class ClusterController:
         self.partitioner.release(blk.grant.block_id)
         seq = self.registry.mark_preempted(
             app_id, reason, progress_lost_steps=progress_lost,
-            checkpoint_step=(int(info["step"]) if info else None))
+            checkpoint_step=(int(info["step"]) if info else None),
+            now=now)
         self.monitor.record_preemption(blk.block_id, progress_lost)
         self.scheduler.requeue_preempted(app_id, seq)
 
@@ -223,7 +319,7 @@ class ClusterController:
         blocks), sample pod utilization."""
         expired = self.registry.expired(now)
         for app_id in expired:
-            self.expire(app_id)
+            self.expire(app_id, now=now)
         self.scheduler.pump(now)
         self.monitor.sample_utilization(
             self.topo.n_chips - self.partitioner.free_capacity(),
@@ -244,9 +340,11 @@ class ClusterController:
             rounds, max_inflight=max(1, sync_every))
 
     # ------------------------------------------------------ fault handling
-    def inject_chip_failure(self, coord: Coord) -> Optional[str]:
+    def inject_chip_failure(self, coord: Coord,
+                            now: Optional[float] = None) -> Optional[str]:
         """Simulate a chip failure.  Returns the app_id that was failed over
-        (and already recovered), if any block owned the chip."""
+        (recovered now, or requeued for deferred recovery), if any block
+        owned the chip."""
         block_id = self.partitioner.mark_unhealthy(coord)
         if block_id is None:
             return None
@@ -254,19 +352,88 @@ class ClusterController:
         if app_id is None:
             return None
         blk = self.registry.get(app_id)
+        pre_failure_state = blk.state
         blk.failure_reason = f"chip {coord} failed"
-        self.registry.set_state(app_id, BlockState.FAILED, str(coord))
-        self.recover_block(app_id)
+        if pre_failure_state in (BlockState.ACTIVE, BlockState.RUNNING):
+            self.registry.set_state(app_id, BlockState.FAILED, str(coord))
+            self.recover_block(app_id, from_state=pre_failure_state.value,
+                               now=now)
+            return app_id
+        # non-executing holder (APPROVED/CONFIRMED own chips from grant
+        # time but have no runtime; a DONE block keeps one for result
+        # download) — FAILED is not even a legal transition here.  Re-carve
+        # the grant in place; when nothing healthy fits, terminate the
+        # grant cleanly instead of leaving the block stranded on a dead
+        # chip.
+        try:
+            coords = self.partitioner.resize(block_id, blk.grant.n_chips,
+                                             pod=blk.request.pod)
+            blk.grant = BlockGrant(block_id=block_id, coords=coords,
+                                   mesh_shape=blk.grant.mesh_shape,
+                                   token=blk.grant.token,
+                                   expires_at=blk.grant.expires_at)
+            old_rt = self.runtimes.get(app_id)
+            if old_rt is not None:
+                # a DONE block's runtime must follow its grant onto the new
+                # chips — DONE -> RUNNING is legal, so a stale device set
+                # would execute on the dead chip if the job were restarted
+                self.runtimes[app_id] = BlockRuntime.rebuild(
+                    old_rt, blk.grant, self.devices_for(coords),
+                    self.ckpt_root)
+            self.registry.persist()
+        except AllocationError:
+            rt = self.runtimes.pop(app_id, None)
+            drain = getattr(rt, "drain", None)
+            if drain is not None:
+                drain()
+            self.partitioner.release(block_id)
+            self.registry.set_state(
+                app_id, BlockState.EXPIRED,
+                f"chip {coord} failed before activation, no replacement "
+                f"rectangle free — resubmit")
+            self.scheduler.pump(now)
         return app_id
 
-    def recover_block(self, app_id: str) -> BlockRuntime:
-        """Re-carve a healthy sub-mesh and restore from checkpoint."""
+    def recover_block(self, app_id: str,
+                      from_state: Optional[str] = None,
+                      now: Optional[float] = None
+                      ) -> Optional[BlockRuntime]:
+        """Re-carve a healthy sub-mesh and restore from checkpoint.
+
+        The replacement rectangle is found with the block's own (healthy)
+        chips treated as free, under one partitioner lock hold
+        (``Partitioner.resize`` at the same size) — the old
+        release-before-allocate sequence opened a window where a concurrent
+        ``submit()``/``pump()`` could steal the freed chips and recovery
+        died with AllocationError, leaving the block FAILED holding nothing
+        and never requeued.  When no healthy rectangle exists *right now*,
+        the block is checkpointed and requeued (PREEMPTED) for auto-resume
+        once capacity frees, and None is returned.  ``from_state`` is the
+        pre-*failure* lifecycle state (so a deferred auto-resume returns an
+        ACTIVE block to ACTIVE, not RUNNING)."""
         blk = self.registry.get(app_id)
         old_rt = self.runtimes.get(app_id)
         assert blk.grant is not None and old_rt is not None
-        self.partitioner.release(blk.grant.block_id)
-        coords = self.partitioner.allocate(blk.grant.n_chips,
-                                           blk.grant.block_id)
+        try:
+            coords = self.partitioner.resize(blk.grant.block_id,
+                                             blk.grant.n_chips,
+                                             pod=blk.request.pod)
+        except AllocationError:
+            # deferred recovery: suspend (drain -> sync checkpoint -> drop
+            # device refs), free the remains, park for auto-resume — the
+            # pre-failure position was RUNNING, so resume returns it there
+            progress_lost = int(getattr(old_rt, "progress_lost", 0) or 0)
+            info = old_rt.suspend()
+            self.partitioner.release(blk.grant.block_id)
+            seq = self.registry.mark_preempted(
+                app_id, "recovery deferred: no healthy rectangle free",
+                progress_lost_steps=progress_lost,
+                checkpoint_step=(int(info["step"]) if info else None),
+                from_state=from_state or BlockState.RUNNING.value,
+                now=now)
+            self.monitor.record_preemption(blk.block_id, progress_lost)
+            self.scheduler.requeue_preempted(app_id, seq)
+            return None
         new_grant = BlockGrant(block_id=blk.grant.block_id, coords=coords,
                                mesh_shape=blk.grant.mesh_shape,
                                token=blk.grant.token,
@@ -276,7 +443,10 @@ class ClusterController:
                                   self.devices_for(coords), self.ckpt_root)
         self.runtimes[app_id] = rt
         self.registry.set_state(app_id, BlockState.ACTIVE, "recovered")
-        self.registry.set_state(app_id, BlockState.RUNNING, "resumed")
+        # return to the pre-failure lifecycle position: an ACTIVE block
+        # whose job was never started must not come back RUNNING
+        if from_state is None or from_state == BlockState.RUNNING.value:
+            self.registry.set_state(app_id, BlockState.RUNNING, "resumed")
         return rt
 
     def resize_block(self, app_id: str, new_n_chips: int) -> BlockRuntime:

@@ -35,11 +35,15 @@ class Monitor:
         self.enqueued_total = 0
         self.admitted_total = 0
         self.queue_waits: List[float] = []       # seconds queued per admission
-        # admission waits split by priority class, so the scheduler's
-        # preemption win (high-priority wait-time delta) is observable
-        self.queue_waits_by_class: Dict[str, List[float]] = {
-            "high": [], "normal": []}
+        # admission waits keyed by the actual priority value (not a binary
+        # high/normal bin — with >= 3 priority levels binning corrupts the
+        # per-class p50s); preemption_report aggregates classes
+        self.queue_waits_by_class: Dict[int, List[float]] = {}
         self.util_samples: List[float] = []      # fraction of chips in use
+        # deadline/SLO accounting (scheduler feeds admission-time slack)
+        self.deadline_hits = 0
+        self.deadline_misses = 0
+        self.admission_slacks: List[float] = []  # deadline - admission time
         # preemption accounting (controller.preempt / scheduler feed these)
         self.preempted_total = 0
         self.resumed_total = 0
@@ -83,18 +87,53 @@ class Monitor:
             self.queue_depth = max(0, self.queue_depth - 1)
 
     def record_admission(self, app_id: str, wait_s: float,
-                         priority: int = 0) -> None:
+                         priority: int = 0,
+                         slack_s: Optional[float] = None) -> None:
+        """``slack_s`` is the entry's deadline slack at admission time
+        (deadline - now); negative means the request was admitted already
+        past its SLO — a deadline miss."""
         with self._lock:
             self.queue_depth = max(0, self.queue_depth - 1)
             self.admitted_total += 1
             self.queue_waits.append(wait_s)
             if len(self.queue_waits) > 2048:
                 self.queue_waits = self.queue_waits[-1024:]
-            cls = "high" if priority > 0 else "normal"
-            waits = self.queue_waits_by_class[cls]
+            waits = self.queue_waits_by_class.setdefault(int(priority), [])
             waits.append(wait_s)
             if len(waits) > 2048:
-                self.queue_waits_by_class[cls] = waits[-1024:]
+                self.queue_waits_by_class[int(priority)] = waits[-1024:]
+            if slack_s is not None:
+                self.record_deadline(slack_s)
+
+    def record_deadline(self, slack_s: float) -> None:
+        """SLO outcome at admission: non-negative slack is a hit.  Also fed
+        directly for immediate admissions that never entered the queue —
+        otherwise only queued requests would count and the miss rate would
+        be overstated."""
+        with self._lock:
+            self.admission_slacks.append(float(slack_s))
+            if len(self.admission_slacks) > 2048:
+                self.admission_slacks = self.admission_slacks[-1024:]
+            if slack_s >= 0.0:
+                self.deadline_hits += 1
+            else:
+                self.deadline_misses += 1
+
+    def deadline_report(self) -> Dict[str, float]:
+        """SLO outcome: admissions that happened with non-negative deadline
+        slack (hits) vs. past-deadline (misses), plus the slack spread."""
+        with self._lock:
+            total = self.deadline_hits + self.deadline_misses
+            slacks = self.admission_slacks
+            return {
+                "deadline_hits": self.deadline_hits,
+                "deadline_misses": self.deadline_misses,
+                "deadline_miss_rate": (self.deadline_misses / total
+                                       if total else 0.0),
+                "mean_admission_slack_s": (statistics.mean(slacks)
+                                           if slacks else 0.0),
+                "min_admission_slack_s": min(slacks) if slacks else 0.0,
+            }
 
     # ------------------------------------------------------------ preemption
     def record_preemption(self, block_id: str,
@@ -117,11 +156,15 @@ class Monitor:
         high-priority admission-wait delta preemption buys."""
         with self._lock:
             lost = self.progress_lost_steps
-            hi = self.queue_waits_by_class["high"]
-            lo = self.queue_waits_by_class["normal"]
+            # aggregate the per-priority-value classes: "high" is any
+            # positive priority, "normal" is <= 0
+            hi = [w for p, ws in self.queue_waits_by_class.items()
+                  if p > 0 for w in ws]
+            lo = [w for p, ws in self.queue_waits_by_class.items()
+                  if p <= 0 for w in ws]
             p50_hi = statistics.median(hi) if hi else 0.0
             p50_lo = statistics.median(lo) if lo else 0.0
-            return {
+            rep = {
                 "preempted_total": self.preempted_total,
                 "resumed_total": self.resumed_total,
                 "mean_progress_lost_steps": (statistics.mean(lost)
@@ -133,6 +176,9 @@ class Monitor:
                 "p50_wait_normal_s": p50_lo,
                 "wait_delta_s": p50_lo - p50_hi,
             }
+            for p, ws in sorted(self.queue_waits_by_class.items()):
+                rep[f"p50_wait_p{p}_s"] = statistics.median(ws) if ws else 0.0
+            return rep
 
     def sample_utilization(self, used_chips: int, total_chips: int) -> None:
         with self._lock:
@@ -171,7 +217,10 @@ class Monitor:
         return out
 
     def dead_blocks(self, now: Optional[float] = None) -> List[str]:
-        now = now or time.time()
+        # `now or time.time()` would silently substitute wall clock for a
+        # model-time 0.0 and corrupt heartbeat accounting under a
+        # simulated clock
+        now = now if now is not None else time.time()
         with self._lock:
             return [s.block_id for s in self.stats.values()
                     if s.steps > 0 and

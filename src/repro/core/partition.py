@@ -131,12 +131,43 @@ class Partitioner:
             except AllocationError:
                 return False
 
-    def can_fit_excluding(self, n_chips: int, freed_block_ids: Sequence[str],
-                          pod: Optional[int] = None) -> bool:
-        """Preemption what-if: would ``allocate`` succeed if these blocks'
-        chips were freed first?  Temporarily clears their ownership under
-        the lock and restores it before returning — the inventory is
-        unchanged when this returns."""
+    def allocate_many(self, specs: Sequence[Tuple[int, str, Optional[int]]]
+                      ) -> Dict[str, List[Coord]]:
+        """Gang allocation: find a rectangle for *every* ``(n_chips,
+        block_id, pod)`` spec under one lock hold, committing only when all
+        fit.  On any failure every partial placement is rolled back and the
+        inventory is bit-identical to before the call — the all-or-nothing
+        property multi-block (gang) admission requires."""
+        with self._lock:
+            placed: Dict[str, List[Coord]] = {}
+            try:
+                for n_chips, block_id, pod in specs:
+                    if block_id in placed:
+                        raise AllocationError(
+                            f"duplicate gang block id {block_id}")
+                    found = self._find_rect(n_chips, pod)
+                    if found is None:
+                        raise AllocationError(
+                            f"gang member {block_id} needs {n_chips} chips: "
+                            f"no contiguous rectangle free")
+                    coords = rect_coords(*found)
+                    for c in coords:
+                        self.chips[c].owner = block_id
+                    placed[block_id] = coords
+            except AllocationError:
+                for coords in placed.values():
+                    for c in coords:
+                        self.chips[c].owner = None
+                raise
+            return placed
+
+    def can_fit_many(self, specs: Sequence[Tuple[int, Optional[int]]],
+                     freed_block_ids: Sequence[str] = ()) -> bool:
+        """Gang admission dry-run (optionally a preemption what-if with
+        ``freed_block_ids``' chips treated as free): would ``allocate_many``
+        succeed right now?  Places each rectangle under temporary dry-run
+        ownership so members can't double-count the same free region; the
+        inventory is unchanged when this returns."""
         with self._lock:
             saved: Dict[Coord, str] = {}
             freed = set(freed_block_ids)
@@ -144,13 +175,33 @@ class Partitioner:
                 if info.owner in freed:
                     saved[c] = info.owner
                     info.owner = None
+            marked: List[Coord] = []
+            ok = True
             try:
-                return self._find_rect(n_chips, pod) is not None
-            except AllocationError:
-                return False
+                for i, (n_chips, pod) in enumerate(specs):
+                    try:
+                        found = self._find_rect(n_chips, pod)
+                    except AllocationError:
+                        found = None
+                    if found is None:
+                        ok = False
+                        break
+                    for c in rect_coords(*found):
+                        self.chips[c].owner = f"_dryrun_{i}"
+                        marked.append(c)
             finally:
+                for c in marked:
+                    self.chips[c].owner = None
                 for c, owner in saved.items():
                     self.chips[c].owner = owner
+            return ok
+
+    def can_fit_excluding(self, n_chips: int, freed_block_ids: Sequence[str],
+                          pod: Optional[int] = None) -> bool:
+        """Preemption what-if for a single rectangle: would ``allocate``
+        succeed if these blocks' chips were freed first?  The inventory is
+        unchanged when this returns."""
+        return self.can_fit_many([(n_chips, pod)], freed_block_ids)
 
     def shape_possible(self, n_chips: int) -> bool:
         """Could this request *ever* fit (valid size with a rectangular
@@ -196,16 +247,33 @@ class Partitioner:
     # ------------------------------------------------------------- elastic
     def resize(self, block_id: str, new_n_chips: int,
                pod: Optional[int] = None) -> List[Coord]:
-        """Elastic grow/shrink: allocate the new rectangle first (under a
-        temporary id), then release the old chips — never a window where the
-        block holds nothing."""
-        tmp_id = block_id + ".resize"
-        coords = self.allocate(new_n_chips, tmp_id, pod=pod)
+        """Elastic grow/shrink, atomic under one lock hold: the replacement
+        rectangle is searched with the block's *own* chips treated as free
+        — so growing 4→8 in place works whenever the block's rectangle plus
+        adjacent free chips form a valid 8-rect — and ownership flips
+        old→new only after a rectangle is found.  On failure the block
+        keeps its old chips; there is never a window where it holds
+        nothing."""
         with self._lock:
-            self.release(block_id)
+            mine = [c for c, info in self.chips.items()
+                    if info.owner == block_id]
+            for c in mine:
+                self.chips[c].owner = None
+            found = None
+            try:
+                found = self._find_rect(new_n_chips, pod)
+            finally:
+                if found is None:
+                    for c in mine:
+                        self.chips[c].owner = block_id
+            if found is None:
+                raise AllocationError(
+                    f"no contiguous {new_n_chips}-chip rectangle for "
+                    f"resize of {block_id} (even counting its own chips)")
+            coords = rect_coords(*found)
             for c in coords:
                 self.chips[c].owner = block_id
-        return coords
+            return coords
 
     # ---------------------------------------------------------- invariants
     def check_invariants(self) -> None:

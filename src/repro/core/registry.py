@@ -52,14 +52,16 @@ class Registry:
                            f"{grant.n_chips} chips assigned")
             self._persist()
 
-    def enqueue(self, app_id: str, note: str = "pod full") -> int:
+    def enqueue(self, app_id: str, note: str = "pod full",
+                now: Optional[float] = None) -> int:
         """Place an application on the admission waitlist (QUEUED state).
         Returns its FIFO sequence number (the base ordering the scheduler's
-        fair-share policy refines)."""
+        fair-share policy refines).  ``now`` keeps queued_at on the model
+        clock when the caller drives simulated time."""
         with self._lock:
             blk = self.apps[app_id]
             blk.transition(BlockState.QUEUED, note)
-            blk.queued_at = time.time()
+            blk.queued_at = now if now is not None else time.time()
             self._queue_seq += 1
             self._queue_order[app_id] = self._queue_seq
             self._persist()
@@ -67,19 +69,24 @@ class Registry:
 
     def mark_preempted(self, app_id: str, note: str,
                        progress_lost_steps: int = 0,
-                       checkpoint_step: Optional[int] = None) -> int:
+                       checkpoint_step: Optional[int] = None,
+                       from_state: Optional[str] = None,
+                       now: Optional[float] = None) -> int:
         """Record an eviction: transition to PREEMPTED, append to the
         persisted preemption history, and re-enter the admission queue
         (preempted blocks keep their FIFO position machinery so the
         scheduler can order them for auto-resume).  Returns the new
-        queue sequence number."""
+        queue sequence number.  ``from_state`` overrides the recorded
+        pre-eviction state (deferred chip-failure recovery passes the
+        pre-*failure* state so auto-resume returns the block there)."""
         with self._lock:
             blk = self.apps[app_id]
-            from_state = blk.state.value
+            if from_state is None:
+                from_state = blk.state.value
             blk.transition(BlockState.PREEMPTED, note)
             blk.record_preemption(note, progress_lost_steps, checkpoint_step,
                                   from_state)
-            blk.queued_at = time.time()
+            blk.queued_at = now if now is not None else time.time()
             self._queue_seq += 1
             self._queue_order[app_id] = self._queue_seq
             self._persist()
@@ -130,7 +137,7 @@ class Registry:
             return None
 
     def expired(self, now: Optional[float] = None) -> List[str]:
-        now = now or time.time()
+        now = now if now is not None else time.time()   # 0.0 is model time
         with self._lock:
             return [a for a, b in self.apps.items()
                     if b.grant and now > b.grant.expires_at
@@ -139,6 +146,12 @@ class Registry:
                                     BlockState.DONE, BlockState.PREEMPTED)]
 
     # -------------------------------------------------------------- persist
+    def persist(self) -> None:
+        """Snapshot state out-of-band (e.g. after a grant re-carve that
+        changes no lifecycle state)."""
+        with self._lock:
+            self._persist()
+
     def _persist(self) -> None:
         if not self.state_path:
             return
@@ -150,6 +163,13 @@ class Registry:
                 "arch": blk.request.arch,
                 "shape": blk.request.shape,
                 "n_chips": blk.request.n_chips,
+                # tenancy-policy metadata: a restarted scheduler (or the
+                # external UI) must see the same priority/deadline/gang
+                # facts admission ordering uses for QUEUED entries
+                "priority": blk.request.priority,
+                "deadline_s": blk.request.deadline_s,
+                "deadline_at": blk.deadline_at,
+                "gang_id": blk.request.gang_id,
                 "state": blk.state.value,
                 "block_id": blk.block_id,
                 "coords": blk.grant.coords if blk.grant else None,

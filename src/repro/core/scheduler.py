@@ -36,6 +36,25 @@ Two subsystems fix that:
   no-churn guard: two equal-priority blocks can never evict each other in
   a loop.
 
+* **Tenancy policy** — a ``SchedulingPolicy`` (``repro.core.policy``) is
+  consulted at three points: at *submit* and *pump* time,
+  ``admission_blocked`` enforces per-user quotas (held-chip caps and
+  chip-second budgets fed from ``Monitor.chip_seconds``) — over-quota
+  requests are *waitlisted*, never denied, and become admissible again as
+  the user's blocks retire; at *pump* time, ``waitlist_key`` orders each
+  fair-share class by least deadline slack instead of FIFO (queue entries
+  carry an absolute ``deadline_at`` computed at submission), with the
+  Monitor recording admission-time slack as deadline hits/misses; at
+  *preempt* time, ``victim_key`` promotes quota-busting running blocks to
+  preferred victims ahead of the (priority, progress-lost, chips) key.
+
+* **Gang admission** — ``submit_gang([...])`` admits a *set* of blocks
+  atomically (multi-block jobs that must co-start, e.g. trainer + eval
+  server): ``Partitioner.allocate_many`` finds every rectangle under one
+  lock hold and rolls back on partial failure, the waitlist treats the
+  gang as one all-or-nothing unit, and victim selection frees room for
+  the whole gang or evicts nothing.
+
 ``SimRuntime`` is a wall-clock model of a block's serial step chain used
 by the scheduler benchmarks and tests (no devices required).
 """
@@ -43,11 +62,12 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Mapping, Optional, Union
+from typing import Callable, Dict, List, Mapping, Optional, Tuple, Union
 
 from repro.core.block import BlockGrant, BlockState
 from repro.core.inflight import InflightWindow
 from repro.core.partition import AllocationError
+from repro.core.policy import SchedulingPolicy
 
 
 @dataclasses.dataclass
@@ -61,6 +81,8 @@ class QueueEntry:
     pod: Optional[int] = None
     job: Optional[object] = None      # JobSpec -> auto activate+run on admit
     preempted: bool = False           # evicted victim awaiting auto-resume
+    deadline_at: Optional[float] = None  # absolute SLO deadline (slack order)
+    gang_id: Optional[str] = None     # all-or-nothing co-admission set
 
 
 # ----------------------------------------------------------------- dispatch
@@ -112,23 +134,56 @@ class BlockScheduler:
     """Admission queue + dispatch loop over a ClusterController."""
 
     def __init__(self, ctl, max_inflight: int = 2,
-                 preemption_enabled: bool = True):
+                 preemption_enabled: bool = True,
+                 policy: Optional[SchedulingPolicy] = None):
         self.ctl = ctl
         self.max_inflight = max_inflight
         self.preemption_enabled = preemption_enabled
+        self.policy = policy or SchedulingPolicy()
         self.waitlist: Dict[str, QueueEntry] = {}   # app_id -> entry
 
     # ------------------------------------------------------------ admission
+    def _entry_for(self, app_id: str, job: Optional[object],
+                   priority: Optional[int], pod: Optional[int],
+                   deadline_s: Optional[float], now: float) -> QueueEntry:
+        """Build a queue entry, persisting overrides onto the request: after
+        admission the request is the canonical record, and preemption
+        (victim selection, requeue) must see the same priority/pod/deadline
+        that admission used."""
+        blk = self.ctl.registry.get(app_id)
+        if priority is not None:
+            blk.request.priority = priority
+        if pod is not None:
+            blk.request.pod = pod
+        if deadline_s is not None:
+            blk.request.deadline_s = deadline_s
+        if blk.request.deadline_s is not None and blk.deadline_at is None:
+            # the SLO clock starts at submission and is absolute from then
+            # on — requeues after preemption keep the original deadline
+            blk.deadline_at = now + blk.request.deadline_s
+        return QueueEntry(
+            app_id=app_id, user=blk.request.user,
+            n_chips=blk.request.n_chips,
+            priority=blk.request.priority,
+            enqueued_at=now, seq=0, pod=blk.request.pod, job=job,
+            deadline_at=blk.deadline_at, gang_id=blk.request.gang_id)
+
     def submit(self, app_id: str, job: Optional[object] = None,
                priority: Optional[int] = None,
-               pod: Optional[int] = None) -> Optional[BlockGrant]:
+               pod: Optional[int] = None,
+               deadline_s: Optional[float] = None,
+               now: Optional[float] = None) -> Optional[BlockGrant]:
         """Admit a registered application now, or park it on the waitlist.
 
         Returns the grant on immediate admission, None when queued.  With a
         ``job`` the block is auto-confirmed, activated and run on admission
         (immediately or later from ``pump()``), so a caller can fire
         arbitrary request traffic at the cluster and let it absorb the load.
+        Requests the user's quota cannot cover are waitlisted (not denied)
+        until the user's running blocks retire.  ``now`` keeps deadline and
+        wait accounting on the model clock under a simulated-clock driver.
         """
+        now = now if now is not None else time.time()
         blk = self.ctl.registry.get(app_id)
         if not self.ctl.partitioner.shape_possible(blk.request.n_chips):
             # never admissible (invalid size / exceeds pod geometry):
@@ -136,36 +191,86 @@ class BlockScheduler:
             self.ctl.registry.deny(
                 app_id, f"{blk.request.n_chips} chips can never fit this pod")
             return None
-        # persist overrides onto the request: after admission the request is
-        # the canonical record, and preemption (victim selection, requeue)
-        # must see the same priority/pod that admission used
-        if priority is not None:
-            blk.request.priority = priority
-        if pod is not None:
-            blk.request.pod = pod
-        entry = QueueEntry(
-            app_id=app_id, user=blk.request.user,
-            n_chips=blk.request.n_chips,
-            priority=blk.request.priority,
-            enqueued_at=time.time(), seq=0, pod=blk.request.pod, job=job)
-        # admit the existing waitlist first so a newcomer can't jump a
-        # higher-ranked entry that also fits
-        self.pump()
-        if not self.waitlist:
-            grant = self._try_admit(entry)
-            if grant is not None:
-                return grant
-        entry.seq = self.ctl.registry.enqueue(
-            app_id, f"waitlisted: {entry.n_chips} chips unavailable")
-        entry.enqueued_at = self.ctl.registry.get(app_id).queued_at
-        self.waitlist[app_id] = entry
-        self.ctl.monitor.record_enqueue(app_id)
-        # backfill: the newcomer may fit even though higher-ranked entries
-        # don't (pump admits in fair-share order with skip-past)
-        self.pump()
-        if app_id not in self.waitlist:
+        entry = self._entry_for(app_id, job, priority, pod, deadline_s, now)
+        if self._submit_unit([entry], now):
             return self.ctl.registry.get(app_id).grant
         return None
+
+    def submit_gang(self, app_ids: List[str],
+                    jobs: Optional[Mapping[str, object]] = None,
+                    priority: Optional[int] = None,
+                    pod: Optional[int] = None,
+                    deadline_s: Optional[float] = None,
+                    now: Optional[float] = None
+                    ) -> Optional[Dict[str, BlockGrant]]:
+        """All-or-nothing admission of a set of registered applications
+        (multi-block jobs that must co-start).  Returns ``{app_id: grant}``
+        when the whole gang is admitted now, None when it was waitlisted as
+        a unit — no member is ever admitted without the others, and a
+        failed attempt leaves the partitioner inventory untouched."""
+        now = now if now is not None else time.time()
+        jobs = jobs or {}
+        reg = self.ctl.registry
+        part = self.ctl.partitioner
+        if not all(part.shape_possible(reg.get(a).request.n_chips)
+                   for a in app_ids):
+            for a in app_ids:       # one impossible member dooms the gang
+                reg.deny(a, "gang member can never fit this pod")
+            return None
+        gang_id = f"gang_{app_ids[0]}"
+        unit = []
+        for app_id in app_ids:
+            reg.get(app_id).request.gang_id = gang_id
+            unit.append(self._entry_for(app_id, jobs.get(app_id),
+                                        priority, pod, deadline_s, now))
+        if self._submit_unit(unit, now):
+            return {e.app_id: reg.get(e.app_id).grant for e in unit}
+        return None
+
+    def _submit_unit(self, unit: List[QueueEntry], now: float) -> bool:
+        """Shared submission sequence for a singleton or gang unit: admit
+        the existing waitlist first (so a newcomer can't jump a
+        higher-ranked entry that also fits), try immediate admission —
+        zero-wait admissions count as SLO outcomes too, or the miss rate
+        would only see requests that queued — otherwise enqueue every
+        member and backfill (pump admits in fair-share order with
+        skip-past).  Returns True when the whole unit holds grants."""
+        # a unit whose chip footprint exceeds its user's own cap can never
+        # become admissible (no running block of theirs can retire enough):
+        # waitlisting would park it forever, so reject up front the way
+        # shape_possible rejects geometrically-impossible sizes
+        per_user: Dict[str, int] = {}
+        for e in unit:
+            per_user[e.user] = per_user.get(e.user, 0) + e.n_chips
+        for user, req in per_user.items():
+            cap = self.policy.quota_for(user).max_chips
+            if cap is not None and req > cap:
+                for e in unit:
+                    self.ctl.registry.deny(
+                        e.app_id,
+                        f"quota: {req} chips exceeds {user}'s cap {cap}")
+                return False
+        self.pump(now)
+        quota_reason = self._quota_blocked(unit, self._held_chips_by_user(),
+                                           self._chip_seconds_by_user())
+        if not self.waitlist and quota_reason is None:
+            if self._admit_unit(unit, now) is not None:
+                for e in unit:
+                    if e.deadline_at is not None:
+                        self.ctl.monitor.record_deadline(e.deadline_at - now)
+                return True
+        note = (f"gang {unit[0].gang_id} waitlisted" if len(unit) > 1
+                else "waitlisted")
+        for entry in unit:
+            entry.seq = self.ctl.registry.enqueue(
+                entry.app_id,
+                quota_reason or f"{note}: {entry.n_chips} chips unavailable",
+                now=now)
+            entry.enqueued_at = self.ctl.registry.get(entry.app_id).queued_at
+            self.waitlist[entry.app_id] = entry
+            self.ctl.monitor.record_enqueue(entry.app_id)
+        self.pump(now)
+        return all(e.app_id not in self.waitlist for e in unit)
 
     def _held_chips_by_user(self) -> Dict[str, int]:
         held: Dict[str, int] = {}
@@ -179,15 +284,72 @@ class BlockScheduler:
                                           + blk.grant.n_chips)
         return held
 
-    def ordered_waitlist(self) -> List[QueueEntry]:
-        """Fair-share admission order: priority desc, then preempted victims
-        ahead of their fair-share class (they already earned their slot once
-        and paid an eviction), then fewest chips the user currently holds,
-        then FIFO."""
+    def _chip_seconds_by_user(self) -> Dict[str, float]:
+        """Cumulative per-user compute spend, aggregated from the Monitor's
+        per-block chip-second accounting (the quota budget input)."""
+        used: Dict[str, float] = {}
+        mon = self.ctl.monitor
+        for blk in list(self.ctl.registry.apps.values()):
+            if blk.block_id:
+                s = mon.stats.get(blk.block_id)
+                if s is not None:
+                    used[blk.request.user] = (used.get(blk.request.user, 0.0)
+                                              + s.chip_seconds)
+        return used
+
+    def _quota_blocked(self, unit: List[QueueEntry],
+                       held: Dict[str, int],
+                       used: Dict[str, float]) -> Optional[str]:
+        """Policy consultation: may this admission unit (singleton or whole
+        gang) be admitted under its users' quotas right now?  Returns the
+        blocking reason, or None.  Blocked units stay waitlisted."""
+        per_user: Dict[str, int] = {}
+        for e in unit:
+            per_user[e.user] = per_user.get(e.user, 0) + e.n_chips
+        for user, req in per_user.items():
+            reason = self.policy.admission_blocked(
+                user, req, held.get(user, 0), used.get(user, 0.0))
+            if reason:
+                return reason
+        return None
+
+    def ordered_waitlist(self, now: Optional[float] = None
+                         ) -> List[QueueEntry]:
+        """Fair-share admission order (policy's ``waitlist_key``): priority
+        desc, then preempted victims ahead of their fair-share class (they
+        already earned their slot once and paid an eviction), then fewest
+        chips the user currently holds, then least deadline slack, then
+        FIFO."""
+        now = now if now is not None else time.time()
         held = self._held_chips_by_user()
-        return sorted(self.waitlist.values(),
-                      key=lambda e: (-e.priority, not e.preempted,
-                                     held.get(e.user, 0), e.seq))
+        return sorted(
+            self.waitlist.values(),
+            key=lambda e: self.policy.waitlist_key(e, held.get(e.user, 0),
+                                                   now))
+
+    def _units(self, now: float,
+               held: Dict[str, int]) -> List[List[QueueEntry]]:
+        """Admission units in fair-share order: singleton entries, plus
+        gangs grouped into one all-or-nothing unit ranked by their best
+        member (preempted victims resume individually — co-start atomicity
+        applies to first admission, not to re-admission)."""
+        gangs: Dict[str, List[QueueEntry]] = {}
+        units: List[List[QueueEntry]] = []
+        for e in self.waitlist.values():
+            if e.gang_id is not None and not e.preempted:
+                gangs.setdefault(e.gang_id, []).append(e)
+            else:
+                units.append([e])
+        units.extend(gangs.values())
+
+        def unit_key(unit: List[QueueEntry]):
+            return min(self.policy.waitlist_key(e, held.get(e.user, 0), now)
+                       for e in unit)
+
+        units.sort(key=unit_key)
+        for unit in units:
+            unit.sort(key=lambda e: e.seq)
+        return units
 
     def requeue_preempted(self, app_id: str, seq: int) -> None:
         """Park an evicted block on the waitlist for auto-resume (the
@@ -198,7 +360,8 @@ class BlockScheduler:
             app_id=app_id, user=blk.request.user,
             n_chips=blk.grant.n_chips if blk.grant else blk.request.n_chips,
             priority=blk.request.priority, enqueued_at=blk.queued_at,
-            seq=seq, pod=blk.request.pod, preempted=True)
+            seq=seq, pod=blk.request.pod, preempted=True,
+            deadline_at=blk.deadline_at, gang_id=blk.request.gang_id)
         self.ctl.monitor.record_enqueue(app_id)
 
     def _try_admit(self, entry: QueueEntry) -> Optional[BlockGrant]:
@@ -217,98 +380,181 @@ class BlockScheduler:
             self.ctl.run(entry.app_id)
         return grant
 
+    def _try_admit_gang(self, unit: List[QueueEntry],
+                        now: Optional[float] = None
+                        ) -> Optional[Dict[str, BlockGrant]]:
+        """Admit every member of a gang or none: ``grant_gang`` allocates
+        all rectangles under one partitioner lock hold and rolls back on
+        partial failure, so a None return leaves the inventory untouched."""
+        try:
+            grants = self.ctl.grant_gang([e.app_id for e in unit])
+        except AllocationError:
+            return None
+        try:
+            for e in unit:
+                if e.job is not None:
+                    self.ctl.confirm(e.app_id, grants[e.app_id].token)
+                    self.ctl.activate(e.app_id, e.job)
+                    self.ctl.run(e.app_id)
+        except Exception:
+            # co-start is all-or-nothing through boot too: a member whose
+            # activation fails must not leave its siblings half-running —
+            # terminate the whole gang (drain + release) and surface the
+            # boot error
+            for e in unit:
+                try:
+                    self.ctl.expire(e.app_id, now=now)
+                except Exception:
+                    pass
+            raise
+        return grants
+
+    def _admit_unit(self, unit: List[QueueEntry],
+                    now: Optional[float] = None
+                    ) -> Optional[Dict[str, BlockGrant]]:
+        if len(unit) == 1:
+            grant = self._try_admit(unit[0])
+            return None if grant is None else {unit[0].app_id: grant}
+        return self._try_admit_gang(unit, now=now)
+
+    def _unit_fits(self, unit: List[QueueEntry]) -> bool:
+        if len(unit) == 1:
+            return self.ctl.partitioner.can_fit(unit[0].n_chips, unit[0].pod)
+        return self.ctl.partitioner.can_fit_many(
+            [(e.n_chips, e.pod) for e in unit])
+
     def _prune_waitlist(self) -> None:
         """Drop entries whose application left the QUEUED (or, for evicted
         victims, PREEMPTED) state behind the scheduler's back (admin deny,
         forced expiry): admitting them would be an illegal transition and
-        would leak their chips."""
+        would leak their chips.  A pruned gang member takes its whole gang
+        with it — the survivors could never co-start."""
+        pruned_gangs = set()
         for app_id, entry in list(self.waitlist.items()):
             expect = (BlockState.PREEMPTED if entry.preempted
                       else BlockState.QUEUED)
             if self.ctl.registry.get(app_id).state != expect:
                 del self.waitlist[app_id]
                 self.ctl.monitor.record_dequeue(app_id)
+                if entry.gang_id is not None and not entry.preempted:
+                    pruned_gangs.add(entry.gang_id)
+        for app_id, entry in list(self.waitlist.items()):
+            if entry.gang_id in pruned_gangs and not entry.preempted:
+                del self.waitlist[app_id]
+                self.ctl.monitor.record_dequeue(app_id)
+                self.ctl.registry.deny(
+                    app_id, f"gang {entry.gang_id} member withdrawn")
 
     def pump(self, now: Optional[float] = None) -> List[str]:
-        """Admit waitlisted applications that now fit, in fair-share order
-        (with backfill past entries that still don't fit).  When nothing
-        fits and preemption is enabled, evict the cheapest sufficient set
-        of strictly-lower-priority running blocks per round to make room
-        for the best-ranked waiter.  Called from ``tick()`` and after
-        every expiry/shrink."""
+        """Admit waitlisted admission units that now fit, in fair-share +
+        deadline-slack order (with backfill past units that don't fit or
+        are quota-blocked).  When nothing fits and preemption is enabled,
+        evict the cheapest sufficient set of strictly-lower-priority
+        running blocks per round to make room for the best-ranked unit.
+        Called from ``tick()`` and after every expiry/shrink."""
         admitted: List[str] = []
-        now = now or time.time()
+        # `now or time.time()` would swap wall clock in for model-time 0.0
+        # and corrupt wait accounting under a simulated clock
+        now = now if now is not None else time.time()
         self._prune_waitlist()
         while True:
             progress = False
-            for entry in self.ordered_waitlist():
-                if not self.ctl.partitioner.can_fit(entry.n_chips, entry.pod):
+            held = self._held_chips_by_user()
+            used = self._chip_seconds_by_user()
+            for unit in self._units(now, held):
+                if self._quota_blocked(unit, held, used) is not None:
+                    continue     # stays waitlisted until usage drops
+                if not self._unit_fits(unit):
                     continue
-                grant = self._try_admit(entry)
-                if grant is None:
+                if self._admit_unit(unit, now) is None:
                     continue
-                del self.waitlist[entry.app_id]
-                wait_s = max(0.0, now - entry.enqueued_at)
-                self.ctl.monitor.record_admission(entry.app_id, wait_s,
-                                                  priority=entry.priority)
-                if entry.preempted:
-                    self.ctl.monitor.record_resume(entry.app_id, wait_s)
-                admitted.append(entry.app_id)
+                for e in unit:
+                    del self.waitlist[e.app_id]
+                    wait_s = max(0.0, now - e.enqueued_at)
+                    # a resume is not a second SLO outcome: the job's
+                    # deadline hit/miss was recorded at first admission
+                    slack = (None if e.deadline_at is None or e.preempted
+                             else e.deadline_at - now)
+                    self.ctl.monitor.record_admission(
+                        e.app_id, wait_s, priority=e.priority, slack_s=slack)
+                    if e.preempted:
+                        self.ctl.monitor.record_resume(e.app_id, wait_s)
+                    admitted.append(e.app_id)
                 progress = True
                 break    # holdings changed: recompute fair-share order
             if not progress and self.preemption_enabled:
-                progress = self._preempt_for_waiters()
+                progress = self._preempt_for_waiters(now, held, used)
             if not progress:
                 return admitted
 
     # ----------------------------------------------------------- preemption
-    def _preempt_for_waiters(self) -> bool:
-        """Evict running block(s) so the best-ranked waiter that cannot
-        currently fit gets room.  Returns True when victims were suspended
-        (the caller's next fair-share pass then admits the waiter)."""
-        for entry in self.ordered_waitlist():
-            victims = self._select_victims(entry)
+    def _preempt_for_waiters(self, now: Optional[float] = None,
+                             held: Optional[Dict[str, int]] = None,
+                             used: Optional[Dict[str, float]] = None) -> bool:
+        """Evict running block(s) so the best-ranked admission unit that
+        cannot currently fit gets room.  Returns True when victims were
+        suspended (the caller's next fair-share pass then admits the
+        unit)."""
+        now = now if now is not None else time.time()
+        held = held if held is not None else self._held_chips_by_user()
+        used = used if used is not None else self._chip_seconds_by_user()
+        for unit in self._units(now, held):
+            if self._quota_blocked(unit, held, used) is not None:
+                continue     # never evict for a unit quota forbids admitting
+            victims = self._select_victims(unit, held, used)
             if not victims:
                 continue
+            label = (unit[0].gang_id if len(unit) > 1 else unit[0].app_id)
             for victim in victims:
                 self.ctl.preempt(
-                    victim, reason=f"evicted for {entry.app_id} "
-                                   f"(priority {entry.priority})")
+                    victim, reason=f"evicted for {label} "
+                                   f"(priority {unit[0].priority})",
+                    now=now)
             return True
         return False
 
-    def _select_victims(self, entry: QueueEntry) -> List[str]:
-        """Victim choice for ``entry``: among running/active blocks of
-        *strictly* lower priority (the no-churn guard — equal-priority
-        blocks can never evict each other in a loop), ranked by (priority,
-        progress-lost = steps since the victim's last checkpoint, held
-        chips) — least important, cheapest-to-stop, smallest first.  Prefer
-        a single victim whose chips let the entry fit; a waiter whose
-        footprint spans several smaller blocks gets the shortest rank-order
-        prefix of victims that frees enough contiguous room.  Returns []
-        (and nothing is evicted) when even the full eligible set would not
-        make the entry fit."""
+    def _select_victims(self, unit: List[QueueEntry],
+                        held: Dict[str, int],
+                        used: Dict[str, float]) -> List[str]:
+        """Victim choice for an admission unit: among running/active blocks
+        of *strictly* lower priority than every member (the no-churn guard
+        — equal-priority blocks can never evict each other in a loop),
+        ranked by the policy's victim key — quota-busting blocks first,
+        then (priority, progress-lost = steps since the victim's last
+        checkpoint, held chips): least important, cheapest-to-stop,
+        smallest.  Prefer a single victim whose chips let the whole unit
+        fit; a footprint spanning several smaller blocks gets the shortest
+        rank-order prefix of victims that frees enough contiguous room for
+        *every* member (gang admission evicts for the whole gang or not at
+        all).  Returns [] (and nothing is evicted) when even the full
+        eligible set would not make the unit fit."""
         reg = self.ctl.registry
         part = self.ctl.partitioner
-        eligible = []
+        floor = min(e.priority for e in unit)
+        footprint = [(e.n_chips, e.pod) for e in unit]
+        eligible: List[Tuple[Tuple, str, str]] = []
         for app_id in reg.by_state(BlockState.RUNNING, BlockState.ACTIVE):
             blk = reg.get(app_id)
-            if blk.grant is None or blk.request.priority >= entry.priority:
+            if blk.grant is None or blk.request.priority >= floor:
                 continue
             rt = self.ctl.runtimes.get(app_id)
             progress_lost = int(getattr(rt, "progress_lost", 0) or 0)
-            eligible.append((blk.request.priority, progress_lost,
-                             blk.grant.n_chips, app_id, blk.grant.block_id))
+            over = self.policy.over_quota(
+                blk.request.user, held.get(blk.request.user, 0),
+                used.get(blk.request.user, 0.0))
+            key = self.policy.victim_key(over, blk.request.priority,
+                                         progress_lost, blk.grant.n_chips)
+            eligible.append((key, app_id, blk.grant.block_id))
         eligible.sort()
-        for _, _, _, app_id, block_id in eligible:
-            if part.can_fit_excluding(entry.n_chips, [block_id], entry.pod):
+        for _, app_id, block_id in eligible:
+            if part.can_fit_many(footprint, [block_id]):
                 return [app_id]
         chosen: List[str] = []
         freed: List[str] = []
-        for _, _, _, app_id, block_id in eligible:
+        for _, app_id, block_id in eligible:
             chosen.append(app_id)
             freed.append(block_id)
-            if part.can_fit_excluding(entry.n_chips, freed, entry.pod):
+            if part.can_fit_many(footprint, freed):
                 break
         else:
             return []
@@ -317,7 +563,7 @@ class BlockScheduler:
         # rectangle) — never evict a block the waiter doesn't need
         for app_id, block_id in list(zip(chosen, freed))[:-1]:
             without = [b for b in freed if b != block_id]
-            if part.can_fit_excluding(entry.n_chips, without, entry.pod):
+            if part.can_fit_many(footprint, without):
                 chosen.remove(app_id)
                 freed.remove(block_id)
         return chosen

@@ -1,0 +1,578 @@
+"""Tenancy policy layer: per-user quotas (waitlist-not-deny, quota-busting
+victim preference), deadline-slack ordering with hit/miss accounting, gang
+all-or-nothing admission/rollback, plus the lifecycle race/accounting fixes
+that shipped with it (recover_block allocate-first + deferred requeue,
+resize grow-in-place, falsy model-time zero, priority binning, expire
+drain)."""
+import json
+import time
+
+import jax
+import pytest
+
+from repro.core.block import BlockState
+from repro.core.controller import ClusterController
+from repro.core.monitor import Monitor
+from repro.core.partition import AllocationError, Partitioner
+from repro.core.policy import SchedulingPolicy, UserQuota
+from repro.core.scheduler import SimRuntime
+from repro.core.topology import Topology
+
+
+def make_ctl(tmp_path, pod_x=4, pod_y=2, n_pods=1, state=False):
+    topo = Topology(n_pods=n_pods, pod_x=pod_x, pod_y=pod_y)
+    dev = jax.devices()[0]
+    return ClusterController(
+        topo, devices=[dev] * topo.n_chips,
+        ckpt_root=str(tmp_path / "ckpt"),
+        state_path=str(tmp_path / "state.json") if state else None)
+
+
+def submit_running(ctl, user, n_chips, priority=0, step_s=0.001,
+                   ckpt_every=0, pod=None):
+    app_id, grant = ctl.submit(user, f"{user} job", n_chips,
+                               priority=priority, pod=pod)
+    assert grant is not None, f"{user} did not fit"
+    ctl.confirm(app_id, grant.token)
+    ctl.registry.set_state(app_id, BlockState.ACTIVE)
+    ctl.registry.set_state(app_id, BlockState.RUNNING)
+    ctl.runtimes[app_id] = SimRuntime(step_s, ckpt_every=ckpt_every)
+    return app_id
+
+
+def ownership_snapshot(part: Partitioner):
+    return {c: info.owner for c, info in part.chips.items()}
+
+
+# ------------------------------------------------------------------ quotas
+
+def test_quota_chip_cap_waitlists_not_denies(tmp_path):
+    """Over-quota requests wait (QUEUED) even when the pod has room, and
+    become admissible as the user's blocks retire."""
+    ctl = make_ctl(tmp_path)                         # 8 chips
+    ctl.scheduler.policy.set_quota("alice", max_chips=4)
+    a1, g1 = ctl.submit("alice", "first", 4)
+    assert g1 is not None
+    a2, g2 = ctl.submit("alice", "second", 4)        # pod has 4 free...
+    assert g2 is None                                # ...but quota says wait
+    blk2 = ctl.registry.get(a2)
+    assert blk2.state == BlockState.QUEUED           # waitlisted, NOT denied
+    assert "quota" in blk2.history[-1][1]
+    ctl.tick()                                       # still blocked
+    assert ctl.registry.get(a2).state == BlockState.QUEUED
+    ctl.expire(a1)                                   # holdings drop to 0
+    assert ctl.registry.get(a2).state == BlockState.APPROVED
+    ctl.partitioner.check_invariants()
+
+
+def test_request_exceeding_user_cap_alone_is_denied_not_parked(tmp_path):
+    """A request bigger than its user's own chip cap can never become
+    admissible (no amount of their blocks retiring helps): deny up front
+    like a geometrically-impossible size, don't waitlist forever."""
+    ctl = make_ctl(tmp_path)
+    ctl.scheduler.policy.set_quota("alice", max_chips=4)
+    a, g = ctl.submit("alice", "bigger than my cap", 8)
+    assert g is None
+    assert ctl.registry.get(a).state == BlockState.DENIED
+    assert ctl.scheduler.queue_depth() == 0
+
+
+def test_quota_chip_seconds_budget_blocks_until_raised(tmp_path):
+    ctl = make_ctl(tmp_path)
+    ctl.scheduler.policy.set_quota("alice", max_chip_seconds=1.0)
+    a1 = submit_running(ctl, "alice", 4)
+    bid = ctl.registry.get(a1).block_id
+    ctl.monitor.record_step(bid, step_s=0.5, n_chips=4)   # 2.0 chip-seconds
+    a2, g2 = ctl.submit("alice", "more", 4)
+    assert g2 is None                                # budget spent -> wait
+    assert ctl.registry.get(a2).state == BlockState.QUEUED
+    ctl.scheduler.policy.set_quota("alice", max_chip_seconds=100.0)
+    ctl.tick()
+    assert ctl.registry.get(a2).state == BlockState.APPROVED
+
+
+def test_quota_busting_victim_preferred(tmp_path):
+    """A running block whose user is over quota is evicted ahead of blocks
+    the plain (priority, progress-lost, chips) key would pick."""
+    ctl = make_ctl(tmp_path, pod_x=4, pod_y=4)       # 16 chips
+    a = submit_running(ctl, "alice", 4)
+    b = submit_running(ctl, "bob", 4)
+    c = submit_running(ctl, "carol", 4)
+    d = submit_running(ctl, "dan", 4)
+    # bob is normally the cheapest victim (least progress lost)...
+    ctl.runtimes[a].step_count = 9
+    ctl.runtimes[b].step_count = 0
+    ctl.runtimes[c].step_count = 5
+    ctl.runtimes[d].step_count = 5
+    # ...but alice's cap is lowered under her running block: quota-buster
+    ctl.scheduler.policy.set_quota("alice", max_chips=2)
+    hi, grant = ctl.submit("eve", "urgent", 4, priority=5)
+    assert grant is not None
+    assert ctl.registry.get(a).state == BlockState.PREEMPTED
+    for other in (b, c, d):
+        assert ctl.registry.get(other).state == BlockState.RUNNING
+
+
+def test_gang_quota_counts_whole_footprint(tmp_path):
+    """Quota sees the gang's total chips, not each member separately: a
+    gang that exceeds the cap outright is denied (it can never fit), while
+    one blocked only by current holdings waits for them to retire."""
+    ctl = make_ctl(tmp_path)                         # 8 chips
+    ctl.scheduler.policy.set_quota("alice", max_chips=6)
+    app_ids, grants = ctl.submit_gang(
+        "alice", [("trainer", 4), ("eval", 4)])      # 8 > 6: never fits cap
+    assert grants is None
+    for a in app_ids:
+        assert ctl.registry.get(a).state == BlockState.DENIED
+
+    ctl.scheduler.policy.set_quota("alice", max_chips=8)
+    filler = submit_running(ctl, "alice", 4)         # holds 4 of cap 8
+    app_ids, grants = ctl.submit_gang(
+        "alice", [("trainer", 2), ("eval", 2)])      # 4 held + 4 > 8? no:
+    assert grants is not None                        # 8 == cap: admitted
+    app_ids2, grants2 = ctl.submit_gang(
+        "alice", [("trainer2", 2), ("eval2", 2)])    # 8 held + 4 > 8: wait
+    assert grants2 is None
+    for a in app_ids2:
+        assert ctl.registry.get(a).state == BlockState.QUEUED
+    ctl.expire(filler)                               # holdings drop to 4
+    for a in app_ids2:
+        assert ctl.registry.get(a).state == BlockState.APPROVED
+
+
+# --------------------------------------------------- deadline-slack ordering
+
+def test_slack_orders_within_fair_share_class(tmp_path):
+    """Equal priority, equal holdings: the tight-deadline latecomer beats
+    the loose-deadline (and deadline-less) earlier entries."""
+    ctl = make_ctl(tmp_path)                         # 8 chips
+    filler = submit_running(ctl, "zed", 8)
+    b, _ = ctl.submit("bob", "no deadline", 8)
+    c, _ = ctl.submit("carol", "loose", 8, deadline_s=1000.0)
+    d, _ = ctl.submit("dave", "tight", 8, deadline_s=5.0)
+    order = [e.app_id for e in ctl.scheduler.ordered_waitlist()]
+    assert order == [d, c, b]                        # least slack first
+    ctl.expire(filler)
+    assert ctl.registry.get(d).state == BlockState.APPROVED
+    assert ctl.registry.get(c).state == BlockState.QUEUED
+
+
+def test_deadline_ordering_disabled_restores_fifo(tmp_path):
+    ctl = make_ctl(tmp_path)
+    ctl.scheduler.policy.deadline_ordering = False
+    filler = submit_running(ctl, "zed", 8)
+    b, _ = ctl.submit("bob", "first", 8, deadline_s=1000.0)
+    d, _ = ctl.submit("dave", "tight", 8, deadline_s=5.0)
+    order = [e.app_id for e in ctl.scheduler.ordered_waitlist()]
+    assert order == [b, d]                           # plain FIFO again
+
+
+def test_deadline_hit_miss_accounting(tmp_path):
+    ctl = make_ctl(tmp_path)
+    filler = submit_running(ctl, "zed", 8)
+    hit, _ = ctl.submit("bob", "will hit", 8, deadline_s=3600.0)
+    ctl.expire(filler)                               # admitted well in time
+    assert ctl.registry.get(hit).state == BlockState.APPROVED
+    rep = ctl.monitor.deadline_report()
+    assert rep["deadline_hits"] == 1 and rep["deadline_misses"] == 0
+    ctl.expire(hit)
+    filler2 = submit_running(ctl, "zed", 8)
+    miss, _ = ctl.submit("carol", "will miss", 8, deadline_s=0.0)
+    assert ctl.registry.get(miss).state == BlockState.QUEUED
+    time.sleep(0.01)                                 # deadline passes queued
+    ctl.expire(filler2)                              # admitted too late
+    assert ctl.registry.get(miss).state == BlockState.APPROVED
+    rep = ctl.monitor.deadline_report()
+    assert rep["deadline_misses"] == 1
+    assert rep["deadline_miss_rate"] == pytest.approx(0.5)
+    assert rep["min_admission_slack_s"] < 0
+
+
+def test_resume_does_not_double_count_deadline_outcome(tmp_path):
+    """A preempted block's auto-resume is not a second SLO outcome — the
+    job's deadline hit/miss was recorded at first admission."""
+    ctl = make_ctl(tmp_path)
+    filler = submit_running(ctl, "zed", 8, priority=5)
+    a, _ = ctl.submit("alice", "deadlined", 8, deadline_s=3600.0)
+    ctl.expire(filler)                               # admitted in time: hit
+    blk = ctl.registry.get(a)
+    assert blk.state == BlockState.APPROVED
+    ctl.confirm(a, blk.grant.token)
+    ctl.registry.set_state(a, BlockState.ACTIVE)
+    ctl.registry.set_state(a, BlockState.RUNNING)
+    ctl.runtimes[a] = SimRuntime(0.001)
+    hi, g = ctl.submit("carol", "urgent", 8, priority=7)   # evicts alice
+    assert g is not None
+    assert ctl.registry.get(a).state == BlockState.PREEMPTED
+    ctl.expire(hi)                                   # alice auto-resumes
+    assert ctl.registry.get(a).state == BlockState.RUNNING
+    rep = ctl.monitor.deadline_report()
+    assert rep["deadline_hits"] + rep["deadline_misses"] == 1
+
+
+def test_submit_accepts_model_time(tmp_path):
+    """submit(now=...) keeps deadline_at, queued_at and the admission wait
+    and slack accounting entirely on the model clock."""
+    ctl = make_ctl(tmp_path)
+    filler = submit_running(ctl, "zed", 8, priority=5)
+    q, _ = ctl.submit("bob", "queued", 8, deadline_s=50.0, now=100.0)
+    blk = ctl.registry.get(q)
+    assert blk.deadline_at == 150.0
+    assert blk.queued_at == 100.0
+    ctl.registry.get(filler).grant.expires_at = 109.0
+    ctl.tick(now=110.0)
+    assert ctl.registry.get(q).state == BlockState.APPROVED
+    assert ctl.monitor.queue_waits[-1] == 10.0
+    rep = ctl.monitor.deadline_report()
+    assert rep["deadline_hits"] == 1
+    assert rep["mean_admission_slack_s"] == pytest.approx(40.0)
+
+
+def test_deadline_metadata_persisted_for_queued(tmp_path):
+    ctl = make_ctl(tmp_path, state=True)
+    filler = submit_running(ctl, "zed", 8, priority=5)  # not preemptible
+    q, _ = ctl.submit("bob", "queued", 8, priority=2, deadline_s=60.0)
+    with open(str(tmp_path / "state.json")) as f:
+        snap = json.load(f)
+    assert snap[q]["state"] == "queued"
+    assert snap[q]["priority"] == 2
+    assert snap[q]["deadline_s"] == 60.0
+    assert snap[q]["deadline_at"] is not None
+
+
+# ----------------------------------------------------------- gang admission
+
+def test_gang_admits_immediately_when_everything_fits(tmp_path):
+    ctl = make_ctl(tmp_path)                         # 8 chips
+    app_ids, grants = ctl.submit_gang(
+        "alice", [("trainer", 4), ("eval server", 4)])
+    assert grants is not None and len(grants) == 2
+    for a in app_ids:
+        blk = ctl.registry.get(a)
+        assert blk.state == BlockState.APPROVED
+        assert blk.request.gang_id == f"gang_{app_ids[0]}"
+    ctl.partitioner.check_invariants()
+
+
+def test_gang_all_or_nothing_waitlists_as_unit(tmp_path):
+    """No member is admitted alone, even when one would fit — and the
+    failed attempt leaves the inventory bit-identical."""
+    ctl = make_ctl(tmp_path, pod_x=4, pod_y=4)       # 16 chips
+    filler = submit_running(ctl, "zed", 8)           # 8 free
+    before = ownership_snapshot(ctl.partitioner)
+    app_ids, grants = ctl.submit_gang(
+        "alice", [("trainer", 8), ("eval", 4)])      # needs 12 > 8 free
+    assert grants is None
+    assert ownership_snapshot(ctl.partitioner) == before   # bit-identical
+    for a in app_ids:                                # trainer-8 DID fit alone
+        assert ctl.registry.get(a).state == BlockState.QUEUED
+    ctl.expire(filler)                               # whole pod frees
+    for a in app_ids:
+        assert ctl.registry.get(a).state == BlockState.APPROVED
+    ctl.partitioner.check_invariants()
+
+
+def test_allocate_many_rolls_back_on_partial_failure():
+    part = Partitioner(Topology(n_pods=1, pod_x=4, pod_y=2))
+    part.allocate(4, "filler")
+    before = {c: info.owner for c, info in part.chips.items()}
+    with pytest.raises(AllocationError):
+        part.allocate_many([(2, "g_a", None), (4, "g_b", None)])  # b can't
+    after = {c: info.owner for c, info in part.chips.items()}
+    assert after == before                           # rollback bit-identical
+    part.check_invariants()
+
+
+def test_can_fit_many_does_not_double_count(tmp_path):
+    part = Partitioner(Topology(n_pods=1, pod_x=4, pod_y=2))
+    assert part.can_fit_many([(4, None), (4, None)])
+    assert not part.can_fit_many([(8, None), (2, None)])  # 10 > 8 chips
+    assert not part.can_fit_many([(4, None), (4, None), (4, None)])
+    assert all(info.owner is None for info in part.chips.values())
+
+
+def test_gang_preemption_frees_room_for_whole_gang_or_none(tmp_path):
+    """Victim selection uses the gang's full footprint: both low-priority
+    blocks are evicted so both gang members co-start."""
+    ctl = make_ctl(tmp_path, pod_x=4, pod_y=4)       # 16 chips
+    lo1 = submit_running(ctl, "alice", 8, priority=0)
+    lo2 = submit_running(ctl, "bob", 8, priority=0)
+    app_ids, grants = ctl.submit_gang(
+        "carol", [("trainer", 8), ("eval", 8)], priority=5)
+    assert grants is not None
+    assert ctl.registry.get(lo1).state == BlockState.PREEMPTED
+    assert ctl.registry.get(lo2).state == BlockState.PREEMPTED
+    for a in app_ids:
+        assert ctl.registry.get(a).state == BlockState.APPROVED
+    ctl.partitioner.check_invariants()
+
+
+def test_gang_no_pointless_eviction_when_gang_cannot_fit(tmp_path):
+    """If even the full eligible set can't host the gang, nothing is
+    evicted (an equal-priority peer blocks part of the footprint)."""
+    ctl = make_ctl(tmp_path, pod_x=4, pod_y=4)       # 16 chips
+    lo = submit_running(ctl, "alice", 8, priority=0)
+    peer = submit_running(ctl, "bob", 8, priority=5)  # not evictable
+    app_ids, grants = ctl.submit_gang(
+        "carol", [("trainer", 8), ("eval", 8)], priority=5)
+    assert grants is None
+    assert ctl.registry.get(lo).state == BlockState.RUNNING
+    assert ctl.registry.get(peer).state == BlockState.RUNNING
+    assert ctl.monitor.preemption_report()["preempted_total"] == 0
+
+
+def test_gang_with_impossible_member_denies_all(tmp_path):
+    ctl = make_ctl(tmp_path)                         # 8-chip pod
+    app_ids, grants = ctl.submit_gang(
+        "alice", [("ok", 4), ("too big", 32)])
+    assert grants is None
+    for a in app_ids:
+        assert ctl.registry.get(a).state == BlockState.DENIED
+    assert ctl.scheduler.queue_depth() == 0
+
+
+def test_gang_member_denied_while_queued_prunes_gang(tmp_path):
+    """Gang atomicity extends to removal: a member denied behind the
+    scheduler's back takes its siblings off the waitlist (they could never
+    co-start)."""
+    ctl = make_ctl(tmp_path)
+    filler = submit_running(ctl, "zed", 8)
+    app_ids, grants = ctl.submit_gang("alice", [("a", 4), ("b", 4)])
+    assert grants is None
+    ctl.registry.deny(app_ids[0], "admin removed gang member")
+    ctl.expire(filler)                               # pump must not admit b
+    assert ctl.registry.get(app_ids[1]).state == BlockState.DENIED
+    assert ctl.scheduler.queue_depth() == 0
+    assert ctl.partitioner.free_capacity() == 8      # nothing leaked
+
+
+def test_gang_boot_failure_terminates_whole_gang(tmp_path, monkeypatch):
+    """Co-start is all-or-nothing through boot: if a member's activation
+    fails after chips were granted, the whole gang is terminated (chips
+    drained + released) instead of left half-running."""
+    ctl = make_ctl(tmp_path)                         # 8 chips
+    calls = []
+
+    def fake_activate(app_id, job):
+        calls.append(app_id)
+        if len(calls) == 2:
+            raise RuntimeError("device init failed")
+        ctl.runtimes[app_id] = SimRuntime(0.001)
+        ctl.registry.set_state(app_id, BlockState.ACTIVE, "runtime built")
+
+    monkeypatch.setattr(ctl, "activate", fake_activate)
+    with pytest.raises(RuntimeError, match="device init failed"):
+        ctl.submit_gang("alice", [("a", 4, object()), ("b", 4, object())])
+    assert ctl.partitioner.free_capacity() == 8      # nothing leaked
+    for blk in ctl.registry.apps.values():
+        assert blk.state == BlockState.EXPIRED       # no half-running gang
+    ctl.partitioner.check_invariants()
+
+
+# --------------------------------------------- lifecycle race / accounting
+
+def test_resize_grows_in_place(tmp_path):
+    """Growing 4->8 succeeds when the block's own rectangle plus adjacent
+    free chips form a valid 8-rect (previously failed: the search ran while
+    the block still owned its old chips)."""
+    part = Partitioner(Topology(n_pods=1, pod_x=4, pod_y=2))   # 8 chips
+    part.allocate(4, "b0")                           # 2x2 corner
+    new = part.resize("b0", 8)                       # whole pod
+    assert len(new) == 8
+    assert set(part.owned_by("b0")) == set(new)
+    part.check_invariants()
+
+
+def test_resize_failure_keeps_old_chips(tmp_path):
+    part = Partitioner(Topology(n_pods=1, pod_x=4, pod_y=2))
+    a_coords = part.allocate(4, "a")
+    part.allocate(4, "b")
+    with pytest.raises(AllocationError):
+        part.resize("a", 8)                          # b blocks the 8-rect
+    assert set(part.owned_by("a")) == set(a_coords)  # never left empty
+    part.check_invariants()
+
+
+def test_recover_block_defers_when_no_healthy_rectangle(tmp_path):
+    """Chip failure with zero spare capacity: the block is checkpointed and
+    requeued (PREEMPTED) for auto-resume instead of dying FAILED holding
+    nothing — and it resumes once capacity frees."""
+    ctl = make_ctl(tmp_path, pod_x=2, pod_y=2)       # 4 chips
+    a = submit_running(ctl, "alice", 2)
+    b = submit_running(ctl, "bob", 2)                # pod full
+    failed_coord = ctl.registry.get(a).grant.coords[0]
+    assert ctl.inject_chip_failure(failed_coord) == a
+    blk = ctl.registry.get(a)
+    assert blk.state == BlockState.PREEMPTED         # deferred, not stuck
+    assert ctl.runtimes[a].suspended
+    assert blk.preemptions[-1]["from_state"] == "running"
+    ctl.partitioner.check_invariants()
+    ctl.expire(b)                                    # healthy capacity frees
+    blk = ctl.registry.get(a)
+    assert blk.state == BlockState.RUNNING           # auto-resumed
+    assert failed_coord not in blk.grant.coords      # on healthy chips
+    ctl.partitioner.check_invariants()
+
+
+def test_recover_block_reuses_own_healthy_chips(tmp_path):
+    """Allocate-first recovery can re-carve onto the block's own surviving
+    chips plus free ones — no release-before-allocate window."""
+    part = Partitioner(Topology(n_pods=1, pod_x=4, pod_y=1))
+    part.allocate(2, "blk")                          # (0,0),(1,0) columns
+    part.allocate(2, "other")
+    owned = part.owned_by("blk")
+    part.mark_unhealthy(owned[0])
+    with pytest.raises(AllocationError):
+        part.resize("blk", 2)                        # 1 healthy own + 0 free
+    assert set(part.owned_by("blk")) == set(owned)   # untouched on failure
+
+
+def test_deferred_recovery_of_active_block_stays_active(tmp_path):
+    """A block that never started its job (ACTIVE) must not come back
+    RUNNING after a deferred chip-failure recovery."""
+    ctl = make_ctl(tmp_path, pod_x=2, pod_y=2)       # 4 chips
+    a, grant = ctl.submit("alice", "staged", 2)
+    ctl.confirm(a, grant.token)
+    ctl.registry.set_state(a, BlockState.ACTIVE)
+    ctl.runtimes[a] = SimRuntime(0.001)
+    b = submit_running(ctl, "bob", 2)                # pod full
+    ctl.inject_chip_failure(ctl.registry.get(a).grant.coords[0])
+    blk = ctl.registry.get(a)
+    assert blk.state == BlockState.PREEMPTED
+    assert blk.preemptions[-1]["from_state"] == "active"
+    ctl.expire(b)                                    # capacity frees
+    assert ctl.registry.get(a).state == BlockState.ACTIVE   # not RUNNING
+
+
+def test_recovery_success_path_preserves_active_state(tmp_path, monkeypatch):
+    """Immediate (non-deferred) chip-failure recovery of an ACTIVE block
+    must also return it to ACTIVE, not promote it to RUNNING."""
+    import repro.core.controller as controller_mod
+    monkeypatch.setattr(controller_mod.BlockRuntime, "rebuild",
+                        staticmethod(lambda old, grant, devices, root: old))
+    ctl = make_ctl(tmp_path)                         # 8 chips, room to spare
+    a, grant = ctl.submit("alice", "staged", 2)
+    ctl.confirm(a, grant.token)
+    ctl.registry.set_state(a, BlockState.ACTIVE)
+    ctl.runtimes[a] = SimRuntime(0.001)
+    assert ctl.inject_chip_failure(grant.coords[0]) == a
+    blk = ctl.registry.get(a)
+    assert blk.state == BlockState.ACTIVE            # recovered, not RUNNING
+    assert grant.coords[0] not in blk.grant.coords
+    ctl.partitioner.check_invariants()
+
+
+def test_chip_failure_before_activation_recarves_grant(tmp_path):
+    """An APPROVED block owns chips but has no runtime: a chip failure
+    re-carves the grant in place instead of crashing on an illegal
+    FAILED transition."""
+    ctl = make_ctl(tmp_path)                         # 8 chips
+    a, grant = ctl.submit("alice", "approved only", 2)
+    failed = grant.coords[0]
+    assert ctl.inject_chip_failure(failed) == a
+    blk = ctl.registry.get(a)
+    assert blk.state == BlockState.APPROVED          # lifecycle untouched
+    assert failed not in blk.grant.coords            # healthy chips now
+    assert blk.grant.token == grant.token            # same capability token
+    ctl.partitioner.check_invariants()
+
+
+def test_chip_failure_before_activation_no_room_terminates_grant(tmp_path):
+    ctl = make_ctl(tmp_path, pod_x=2, pod_y=2)       # 4 chips
+    a, ga = ctl.submit("alice", "approved", 2)
+    b = submit_running(ctl, "bob", 2)                # pod full
+    assert ctl.inject_chip_failure(ga.coords[0]) == a
+    blk = ctl.registry.get(a)
+    assert blk.state == BlockState.EXPIRED           # clean termination
+    assert ctl.partitioner.owned_by(ga.block_id) == []
+    assert ctl.partitioner.free_capacity() == 1      # the healthy survivor
+    ctl.partitioner.check_invariants()
+
+
+def test_immediate_admission_counts_deadline_hit(tmp_path):
+    """Zero-wait admissions are SLO outcomes too — otherwise only queued
+    requests would count and the miss rate would be overstated."""
+    ctl = make_ctl(tmp_path)
+    a, g = ctl.submit("alice", "instant", 8, deadline_s=60.0, now=1000.0)
+    assert g is not None
+    rep = ctl.monitor.deadline_report()
+    assert rep["deadline_hits"] == 1 and rep["deadline_misses"] == 0
+    assert rep["mean_admission_slack_s"] == pytest.approx(60.0)
+
+
+def test_preempt_resume_wait_on_model_clock(tmp_path):
+    """Victim requeue time and resume wait stay on the model clock when
+    the whole submit/preempt/tick chain is driven with now=..."""
+    ctl = make_ctl(tmp_path)
+    lo = submit_running(ctl, "alice", 8, priority=0)
+    hi, g = ctl.submit("carol", "urgent", 8, priority=5, now=500.0)
+    assert g is not None                             # evicted alice
+    assert ctl.registry.get(lo).queued_at == 500.0   # model time, not epoch
+    ctl.registry.get(hi).grant.expires_at = 501.0
+    ctl.tick(now=510.0)                              # alice auto-resumes
+    assert ctl.registry.get(lo).state == BlockState.RUNNING
+    assert ctl.monitor.resume_waits[-1] == 10.0
+
+
+def test_expire_drains_inflight_dispatches(tmp_path):
+    """expire() must drain the runtime before releasing its chips — a
+    popped runtime with async work in flight would still be executing on
+    chips the next pump() hands to another block."""
+    ctl = make_ctl(tmp_path)
+    a = submit_running(ctl, "alice", 8, step_s=0.05)  # slow SimRuntime
+    rt = ctl.runtimes[a]
+    rt.dispatch()
+    rt.dispatch()
+    assert rt.inflight_depth == 2
+    b, g = ctl.submit("bob", "next tenant", 8)       # queued behind alice
+    assert g is None
+    ctl.expire(a)
+    assert rt.inflight_depth == 0                    # drained before release
+    assert ctl.registry.get(b).state == BlockState.APPROVED
+
+
+def test_pump_accepts_model_time_zero(tmp_path):
+    """pump(now=0.0) must use the given model time, not wall clock."""
+    ctl = make_ctl(tmp_path)
+    filler = submit_running(ctl, "zed", 8)
+    q, _ = ctl.submit("bob", "queued", 8)
+    ctl.registry.get(filler).grant.expires_at = -1.0  # expired at t=0
+    ctl.tick(now=0.0)
+    assert ctl.registry.get(q).state == BlockState.APPROVED
+    # wait recorded relative to model time 0.0, not a huge wall-clock value
+    assert ctl.monitor.queue_waits[-1] == 0.0
+
+
+def test_dead_blocks_accepts_model_time_zero():
+    mon = Monitor()
+    s = mon._get("blk_x")
+    s.steps = 1
+    s.last_heartbeat = -30.0                         # model time
+    assert mon.dead_blocks(now=0.0) == []            # 30s ago: alive
+    s.last_heartbeat = -3600.0
+    assert mon.dead_blocks(now=0.0) == ["blk_x"]     # 1h ago: dead
+
+
+def test_priority_classes_keyed_by_value():
+    """With >= 3 priority levels the per-class waits must not collapse into
+    a binary high/normal bin."""
+    mon = Monitor()
+    for prio, wait in [(0, 1.0), (1, 2.0), (1, 4.0), (5, 0.5)]:
+        mon.record_enqueue(f"app_p{prio}")
+        mon.record_admission(f"app_p{prio}", wait, priority=prio)
+    assert set(mon.queue_waits_by_class) == {0, 1, 5}
+    rep = mon.preemption_report()
+    assert rep["p50_wait_p0_s"] == 1.0
+    assert rep["p50_wait_p1_s"] == 3.0               # median of 2.0, 4.0
+    assert rep["p50_wait_p5_s"] == 0.5
+    assert rep["p50_wait_normal_s"] == 1.0
+    assert rep["p50_wait_high_s"] == 2.0             # aggregate of p1 + p5
+
+
+def test_policy_quota_defaults_uncapped():
+    pol = SchedulingPolicy()
+    assert pol.admission_blocked("anyone", 10 ** 6, 10 ** 6, 10.0 ** 12) \
+        is None
+    assert not pol.over_quota("anyone", 10 ** 6, 10.0 ** 12)
+    pol.default_quota = UserQuota(max_chips=8)
+    assert pol.admission_blocked("anyone", 4, 8, 0.0) is not None
