@@ -1,0 +1,150 @@
+"""Web gateway service benchmark: request throughput and admit-to-event
+feed latency.
+
+Two numbers matter for "control and monitor the whole system over web":
+
+* **requests/s** — concurrent read traffic (block status + cluster
+  report) against the threaded HTTP server while the daemon pump is live.
+* **admit-to-event latency** — the freshness of the monitoring feed: time
+  from a client's submit request to the moment the resulting ``admitted``
+  event is *observed on a long-poll feed* by an independent watcher.
+
+Sim jobs keep XLA out of the loop — this measures the gateway + daemon
+command path, not model compiles.  Output follows the repo's benchmark
+CSV convention: name,us_per_call,derived.
+
+    PYTHONPATH=src python benchmarks/gateway_throughput.py
+"""
+import json
+import os
+import statistics
+import sys
+import threading
+import time
+import urllib.request
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.core.daemon import ClusterDaemon
+from repro.core.topology import Topology
+from repro.gateway import GatewayServer, ProfileStore, UserProfile
+
+N_STATUS = 400          # read requests across READERS threads
+READERS = 4
+N_ADMITS = 30           # submit -> admitted-event-observed cycles
+
+
+def req(base, method, path, token, body=None, timeout=30):
+    r = urllib.request.Request(base + path, method=method,
+                               data=(json.dumps(body).encode()
+                                     if body is not None else None))
+    r.add_header("Authorization", f"Bearer {token}")
+    with urllib.request.urlopen(r, timeout=timeout) as resp:
+        return json.loads(resp.read())
+
+
+def main() -> int:
+    topo = Topology(n_pods=1, pod_x=4, pod_y=4)
+    dev = jax.devices()[0]
+    daemon = ClusterDaemon(topo, devices=[dev] * topo.n_chips,
+                           ckpt_root="artifacts/gw_bench_ckpt",
+                           background=True, tick_interval_s=0.01)
+    profiles = ProfileStore([
+        UserProfile("u", "tok-u"),
+        UserProfile("root", "tok-admin", admin=True)])
+    server = GatewayServer(daemon, profiles).start()
+    base = server.url
+    sim = {"kind": "sim", "step_s": 0.001}
+
+    # ------------------------------------------------- read throughput
+    seed = req(base, "POST", "/v1/submit", "tok-u",
+               {"job_description": "probe", "n_chips": 4, "job": sim})
+    app = seed["app_id"]
+
+    def reader(n, errs):
+        for i in range(n):
+            try:
+                path = (f"/v1/blocks/{app}" if i % 2 else "/v1/cluster")
+                req(base, "GET", path, "tok-u")
+            except Exception:
+                errs.append(1)
+
+    errs = []
+    threads = [threading.Thread(target=reader,
+                                args=(N_STATUS // READERS, errs))
+               for _ in range(READERS)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    rps = (N_STATUS - len(errs)) / wall
+    us_per_req = wall / max(1, N_STATUS - len(errs)) * 1e6
+
+    # -------------------------------------- admit-to-event feed latency
+    submit_t = {}
+    observe_t = {}
+    stop = threading.Event()
+
+    # cursor snapshotted *before* the watcher starts and before any
+    # submit: a slow thread start must not skip early admitted events
+    start_cursor = daemon.bus.latest_seq
+
+    def watcher():
+        """Independent monitor long-polling the global feed, timestamping
+        each admitted event the moment it becomes visible."""
+        after = start_cursor
+        while not stop.is_set():
+            page = req(base, "GET",
+                       f"/v1/events?after={after}&timeout_s=2"
+                       f"&kinds=admitted", "tok-admin")
+            for ev in page["events"]:
+                observe_t.setdefault(ev["app_id"], time.perf_counter())
+            after = page["next_after"]
+
+    w = threading.Thread(target=watcher)
+    w.start()
+    for i in range(N_ADMITS):
+        t0 = time.perf_counter()
+        r = req(base, "POST", "/v1/submit", "tok-u",
+                {"job_description": f"lat {i}", "n_chips": 4, "job": sim})
+        submit_t[r["app_id"]] = t0
+        # bounded pod: retire each block so the next admits immediately
+        req(base, "POST", f"/v1/blocks/{r['app_id']}/expire", "tok-u", {})
+    deadline = time.monotonic() + 10.0
+    while len(observe_t) < len(submit_t) and time.monotonic() < deadline:
+        time.sleep(0.01)
+    stop.set()
+    w.join()
+
+    lats = [observe_t[a] - t for a, t in submit_t.items()
+            if a in observe_t]
+    p50_ms = statistics.median(lats) * 1e3 if lats else float("inf")
+    max_ms = max(lats) * 1e3 if lats else float("inf")
+
+    server.stop()
+    daemon.stop()
+
+    print("name,us_per_call,derived")
+    print(f"gateway_read_requests_per_s,{us_per_req:.0f},{rps:.0f}")
+    print(f"gateway_admit_event_latency_p50_ms,0,{p50_ms:.2f}")
+    print(f"gateway_admit_event_latency_max_ms,0,{max_ms:.2f}")
+    print(f"gateway_admit_events_observed,0,{len(lats)}/{N_ADMITS}")
+
+    ok = True
+    if errs or len(lats) < N_ADMITS:
+        print(f"WARNING: {len(errs)} read errors, "
+              f"{N_ADMITS - len(lats)} unobserved admits", file=sys.stderr)
+        ok = False
+    if rps < 50:
+        print("WARNING: gateway read throughput below 50 req/s",
+              file=sys.stderr)
+        ok = False
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -13,7 +13,7 @@ import jax
 import numpy as np
 
 import repro.configs as C
-from repro.core.controller import ClusterController
+from repro.core.daemon import ClusterDaemon
 from repro.core.runtime import JobSpec
 from repro.core.topology import Topology
 from repro.models.config import ShapeConfig
@@ -28,7 +28,7 @@ def timed_steps(ctl, rounds=6):
 
 def main():
     topo = Topology(n_pods=1, pod_x=4, pod_y=2)
-    ctl = ClusterController(topo, ckpt_root="artifacts/bench_ckpt")
+    ctl = ClusterDaemon(topo, ckpt_root="artifacts/bench_ckpt")
     shape = ShapeConfig("b", "train", seq_len=128, global_batch=8,
                         microbatch=1)
     opt = OptConfig(warmup_steps=2, total_steps=100)

@@ -30,7 +30,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 
 from repro.core.block import BlockState
-from repro.core.controller import ClusterController
+from repro.core.daemon import ClusterDaemon
 from repro.core.scheduler import SimRuntime
 from repro.core.topology import Topology
 
@@ -40,7 +40,7 @@ STEP_S = 0.03
 def build(pod_x=4, pod_y=4):
     topo = Topology(n_pods=1, pod_x=pod_x, pod_y=pod_y)
     dev = jax.devices()[0]
-    return ClusterController(topo, devices=[dev] * topo.n_chips,
+    return ClusterDaemon(topo, devices=[dev] * topo.n_chips,
                              ckpt_root="artifacts/policy_bench_ckpt")
 
 
@@ -70,7 +70,7 @@ def run_workload(ctl, jobs):
                 ctl.runtimes[app] = SimRuntime(STEP_S)
         running = ctl.registry.by_state(BlockState.RUNNING)
         if running:
-            ctl.scheduler.run_dispatch({a: 1 for a in running})
+            ctl.run_steps({a: 1 for a in running})
         for app, rec in info.items():
             rt = ctl.runtimes.get(app)
             blk = ctl.registry.get(app)

@@ -27,7 +27,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 
 from repro.core.block import BlockState
-from repro.core.controller import ClusterController
+from repro.core.daemon import ClusterDaemon
 from repro.core.scheduler import SimRuntime
 from repro.core.topology import Topology
 
@@ -43,7 +43,7 @@ HIGH_STEPS = 20         # steps a high-priority block runs before expiring
 def build(preemption: bool):
     topo = Topology(n_pods=1, pod_x=4, pod_y=4)
     dev = jax.devices()[0]
-    ctl = ClusterController(topo, devices=[dev] * topo.n_chips,
+    ctl = ClusterDaemon(topo, devices=[dev] * topo.n_chips,
                             ckpt_root="artifacts/preempt_bench_ckpt")
     ctl.scheduler.preemption_enabled = preemption
     low = []
@@ -82,7 +82,7 @@ def run_mode(preemption: bool):
         # drive whatever runs, retire finished high blocks, tick the clock
         running = ctl.registry.by_state(BlockState.RUNNING)
         if running:
-            ctl.scheduler.run_dispatch({a: 2 for a in running})
+            ctl.run_steps({a: 2 for a in running})
         for app in list(highs):
             info = highs[app]
             blk = ctl.registry.get(app)

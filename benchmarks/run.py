@@ -7,6 +7,7 @@
   (scheduler) event-driven vs round-robin      -> benchmarks/scheduler_throughput.py
   (scheduler) preemptive vs wait-for-expiry    -> benchmarks/preemption_latency.py
   (scheduler) policy vs FIFO admission         -> benchmarks/policy_admission.py
+  (gateway)   web request rate + feed latency  -> benchmarks/gateway_throughput.py
 
 Prints ``name,us_per_call,derived`` CSV.  Subprocesses own the multi-device
 XLA flag so this process (and pytest) keep a single device.
@@ -48,8 +49,8 @@ def write_json(json_dir, section, rows, ok):
         json.dump({"section": section, "ok": ok, "rows": rows}, f, indent=1)
 
 
-def run_sub(script: str, devices: int, json_dir=None) -> None:
-    section = os.path.splitext(script)[0]
+def run_sub(script: str, devices: int, json_dir=None, section=None) -> None:
+    section = section or os.path.splitext(script)[0]
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
@@ -109,6 +110,8 @@ SECTIONS = [
      "preemption_latency.py", 1),
     ("policy_admission", "scheduler: tenancy policy (quota/deadline/gang) vs FIFO",
      "policy_admission.py", 1),
+    ("gateway", "web gateway: request throughput + admit-to-event latency",
+     "gateway_throughput.py", 1),
 ]
 
 
@@ -129,7 +132,8 @@ def main() -> None:
         if script is None:
             run_structural(json_dir=args.json)
         else:
-            run_sub(script, devices=devices, json_dir=args.json)
+            run_sub(script, devices=devices, json_dir=args.json,
+                    section=key)
 
 
 if __name__ == "__main__":

@@ -21,7 +21,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import repro.configs as C
 from repro.core.block import BlockState
-from repro.core.controller import ClusterController
+from repro.core.daemon import ClusterDaemon
 from repro.core.runtime import JobSpec
 from repro.core.topology import Topology
 from repro.models.config import ShapeConfig
@@ -32,7 +32,7 @@ FILLER_STEPS = 3
 
 def main():
     topo = Topology(n_pods=1, pod_x=4, pod_y=4)
-    ctl = ClusterController(topo, ckpt_root="artifacts/gang_ckpt",
+    ctl = ClusterDaemon(topo, ckpt_root="artifacts/gang_ckpt",
                             state_path="artifacts/gang_state.json")
     train_shape = ShapeConfig("t", "train", seq_len=32, global_batch=4,
                               microbatch=1)

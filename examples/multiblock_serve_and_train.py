@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 import repro.configs as C
-from repro.core.controller import ClusterController
+from repro.core.daemon import ClusterDaemon
 from repro.core.runtime import JobSpec
 from repro.core.topology import Topology
 from repro.models.config import ShapeConfig
@@ -26,7 +26,7 @@ from repro.train.optimizer import OptConfig
 
 def main():
     topo = Topology(n_pods=1, pod_x=4, pod_y=2)
-    ctl = ClusterController(topo, ckpt_root="artifacts/mixed_ckpt")
+    ctl = ClusterDaemon(topo, ckpt_root="artifacts/mixed_ckpt")
 
     train_shape = ShapeConfig("t", "train", seq_len=64, global_batch=8,
                               microbatch=2)

@@ -19,7 +19,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import repro.configs as C
 from repro.core.block import BlockState
-from repro.core.controller import ClusterController
+from repro.core.daemon import ClusterDaemon
 from repro.core.runtime import JobSpec
 from repro.core.topology import Topology
 from repro.models.config import ShapeConfig
@@ -35,7 +35,7 @@ def state_of(ctl, app):
 
 def main():
     topo = Topology(n_pods=1, pod_x=2, pod_y=2)
-    ctl = ClusterController(topo, ckpt_root="artifacts/preempt_demo_ckpt",
+    ctl = ClusterDaemon(topo, ckpt_root="artifacts/preempt_demo_ckpt",
                             state_path="artifacts/preempt_demo_state.json")
     shape = ShapeConfig("d", "train", seq_len=32, global_batch=4,
                         microbatch=1)

@@ -20,7 +20,7 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import repro.configs as C
-from repro.core.controller import ClusterController
+from repro.core.daemon import ClusterDaemon
 from repro.core.runtime import JobSpec
 from repro.core.topology import Topology
 from repro.models.config import ShapeConfig
@@ -29,7 +29,7 @@ from repro.train.optimizer import OptConfig
 
 def main():
     topo = Topology(n_pods=1, pod_x=4, pod_y=4)
-    ctl = ClusterController(topo, ckpt_root="artifacts/lpc_ckpt",
+    ctl = ClusterDaemon(topo, ckpt_root="artifacts/lpc_ckpt",
                             state_path="artifacts/lpc_state.json")
     shape = ShapeConfig("session", "train", seq_len=64, global_batch=8,
                         microbatch=2)

@@ -18,7 +18,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import repro.configs as C
 from repro.core.block import BlockState
-from repro.core.controller import ClusterController
+from repro.core.daemon import ClusterDaemon
 from repro.core.runtime import JobSpec
 from repro.core.topology import Topology
 from repro.models.config import ShapeConfig
@@ -31,7 +31,7 @@ STEPS_EACH = 4          # steps a block runs before its period ends
 
 def main():
     topo = Topology(n_pods=1, pod_x=4, pod_y=4)
-    ctl = ClusterController(topo, ckpt_root="artifacts/queue_ckpt",
+    ctl = ClusterDaemon(topo, ckpt_root="artifacts/queue_ckpt",
                             state_path="artifacts/queue_state.json")
     shape = ShapeConfig("q", "train", seq_len=32, global_batch=4,
                         microbatch=1)
@@ -56,7 +56,7 @@ def main():
     while len(done) < N_USERS:
         epoch += 1
         running = ctl.registry.by_state(BlockState.RUNNING)
-        ctl.scheduler.run_dispatch({a: 1 for a in running})
+        ctl.run_steps({a: 1 for a in running})
         for a in running:
             if ctl.runtimes[a].step_count >= STEPS_EACH:
                 res = ctl.download(a)          # RUNNING -> DONE

@@ -97,6 +97,10 @@ class BlockRequest:
     pod: Optional[int] = None         # admin pod pinning (None = any pod)
     deadline_s: Optional[float] = None  # SLO: wanted done this many seconds
                                         # after submission (None = no SLO)
+    est_steps: Optional[int] = None   # user-declared work size; with the
+                                      # Monitor's EWMA step time this gives
+                                      # the admission-time completion
+                                      # estimate slack ordering uses
     gang_id: Optional[str] = None     # co-scheduled set this block belongs
                                       # to (all-or-nothing admission)
 

@@ -23,6 +23,13 @@ Tenancy policy: the scheduler consults a ``SchedulingPolicy`` for per-user
 quotas, deadline-slack ordering and preferred-victim choice;
 ``submit_gang``/``grant_gang`` admit multi-block jobs atomically
 (all-or-nothing) via ``Partitioner.allocate_many``.
+
+Observability: every lifecycle transition and scheduling decision is
+published on the controller's ``EventBus`` (``repro.core.events``); the
+``Monitor`` subscribes for its accounting and the web gateway's long-poll
+feeds replay the same stream.  Callers outside ``repro.core`` should go
+through the ``ClusterDaemon`` service layer rather than constructing a
+controller directly.
 """
 from __future__ import annotations
 
@@ -33,27 +40,35 @@ import jax
 from repro.core import interference
 from repro.core.block import (Block, BlockGrant, BlockRequest, BlockState,
                               TRANSITIONS)
+from repro.core.events import EventBus
 from repro.core.monitor import Monitor
 from repro.core.partition import AllocationError, Partitioner, mesh_shape_for
 from repro.core.registry import Registry
-from repro.core.runtime import BlockRuntime, JobSpec
-from repro.core.scheduler import BlockScheduler
+from repro.core.runtime import BlockRuntime, JobSpec, SimJobSpec
+from repro.core.scheduler import BlockScheduler, SimRuntime
 from repro.core.topology import Coord, Topology
 
 
 class ClusterController:
     def __init__(self, topo: Topology, devices: Optional[Sequence] = None,
                  ckpt_root: str = "artifacts/ckpt",
-                 state_path: Optional[str] = None):
+                 state_path: Optional[str] = None,
+                 bus: Optional[EventBus] = None):
         self.topo = topo
         self.devices = list(devices) if devices is not None else jax.devices()
         if len(self.devices) < topo.n_chips:
             raise ValueError(
                 f"topology needs {topo.n_chips} devices, have "
                 f"{len(self.devices)} (set xla_force_host_platform_device_count)")
+        # the event bus is the observable spine: the registry publishes
+        # every lifecycle transition, scheduler/controller publish the
+        # scheduling decisions, and the Monitor subscribes instead of
+        # being called directly
+        self.bus = bus or EventBus()
         self.partitioner = Partitioner(topo)
-        self.registry = Registry(state_path=state_path)
+        self.registry = Registry(state_path=state_path, bus=self.bus)
         self.monitor = Monitor()
+        self.monitor.subscribe_to(self.bus)
         self.runtimes: Dict[str, BlockRuntime] = {}   # app_id -> runtime
         self.ckpt_root = ckpt_root
         self.scheduler = BlockScheduler(self)
@@ -66,11 +81,12 @@ class ClusterController:
     def register(self, user: str, job_description: str, n_chips: int,
                  arch: str = "", shape: str = "train_4k",
                  duration_s: float = 3600.0, priority: int = 0,
-                 deadline_s: Optional[float] = None) -> str:
+                 deadline_s: Optional[float] = None,
+                 est_steps: Optional[int] = None) -> str:
         return self.registry.register(BlockRequest(
             user=user, job_description=job_description, n_chips=n_chips,
             arch=arch, shape=shape, duration_s=duration_s,
-            priority=priority, deadline_s=deadline_s))
+            priority=priority, deadline_s=deadline_s, est_steps=est_steps))
 
     def submit(self, user: str, job_description: str, n_chips: int,
                job: Optional[JobSpec] = None, priority: int = 0,
@@ -200,14 +216,20 @@ class ClusterController:
     def confirm(self, app_id: str, token: str) -> None:
         self.registry.confirm(app_id, token)
 
-    def activate(self, app_id: str, job: JobSpec) -> BlockRuntime:
+    def activate(self, app_id: str, job):
         """Power on the block's chips and boot its runtime (paper: switch
-        nodes on + activate the user's MPD daemons)."""
+        nodes on + activate the user's MPD daemons).  A ``SimJobSpec``
+        boots the device-free wall-clock simulator instead of a real
+        runtime — the gateway's sim jobs and scheduler benchmarks drive
+        the identical lifecycle without XLA."""
         blk = self.registry.get(app_id)
         assert blk.grant is not None
-        devices = self.devices_for(blk.grant.coords)
-        rt = BlockRuntime(blk.grant, job, devices, self.ckpt_root)
-        rt.init_state()
+        if isinstance(job, SimJobSpec):
+            rt = SimRuntime(job.step_s, ckpt_every=job.ckpt_every)
+        else:
+            devices = self.devices_for(blk.grant.coords)
+            rt = BlockRuntime(blk.grant, job, devices, self.ckpt_root)
+            rt.init_state()
         self.runtimes[app_id] = rt
         self.registry.set_state(app_id, BlockState.ACTIVE, "runtime built")
         return rt
@@ -222,11 +244,12 @@ class ClusterController:
         stats = self.monitor.stats.get(blk.block_id or "", None)
         if blk.state == BlockState.RUNNING:
             self.registry.set_state(app_id, BlockState.DONE, "results ready")
+        ckpt = getattr(rt, "ckpt", None)      # SimRuntime has no manager
         return {
             "steps": rt.step_count if rt else 0,
             "metrics": stats.last_metrics if stats else {},
-            "checkpoints": rt.ckpt.steps() if rt else [],
-            "checkpoint_dir": rt.ckpt.dir if rt else None,
+            "checkpoints": ckpt.steps() if ckpt else [],
+            "checkpoint_dir": ckpt.dir if ckpt else None,
         }
 
     def expire(self, app_id: str, now: Optional[float] = None) -> None:
@@ -273,7 +296,11 @@ class ClusterController:
             app_id, reason, progress_lost_steps=progress_lost,
             checkpoint_step=(int(info["step"]) if info else None),
             now=now)
-        self.monitor.record_preemption(blk.block_id, progress_lost)
+        self.bus.publish("preempted", app_id=app_id, block_id=blk.block_id,
+                         user=blk.request.user, now=now, reason=reason,
+                         progress_lost_steps=progress_lost,
+                         checkpoint_step=(int(info["step"]) if info
+                                          else None))
         self.scheduler.requeue_preempted(app_id, seq)
 
     def resume(self, app_id: str,
@@ -311,6 +338,10 @@ class ClusterController:
         if blk.preemptions and blk.preemptions[-1].get("from_state") == \
                 BlockState.RUNNING.value:
             self.registry.set_state(app_id, BlockState.RUNNING, "resumed")
+        self.bus.publish("resumed", app_id=app_id,
+                         block_id=new_grant.block_id, user=blk.request.user,
+                         n_chips=n,
+                         step=(rt.step_count if rt is not None else 0))
         return new_grant
 
     def tick(self, now: Optional[float] = None) -> List[str]:
@@ -321,9 +352,10 @@ class ClusterController:
         for app_id in expired:
             self.expire(app_id, now=now)
         self.scheduler.pump(now)
-        self.monitor.sample_utilization(
-            self.topo.n_chips - self.partitioner.free_capacity(),
-            self.topo.n_chips)
+        self.bus.publish(
+            "utilization", now=now,
+            used_chips=self.topo.n_chips - self.partitioner.free_capacity(),
+            total_chips=self.topo.n_chips)
         return expired
 
     # ------------------------------------------------ concurrent execution
@@ -431,7 +463,14 @@ class ClusterController:
                 checkpoint_step=(int(info["step"]) if info else None),
                 from_state=from_state or BlockState.RUNNING.value,
                 now=now)
-            self.monitor.record_preemption(blk.block_id, progress_lost)
+            self.bus.publish("preempted", app_id=app_id,
+                             block_id=blk.block_id, user=blk.request.user,
+                             now=now,
+                             reason="recovery deferred: no healthy "
+                                    "rectangle free",
+                             progress_lost_steps=progress_lost,
+                             checkpoint_step=(int(info["step"]) if info
+                                              else None))
             self.scheduler.requeue_preempted(app_id, seq)
             return None
         new_grant = BlockGrant(block_id=blk.grant.block_id, coords=coords,

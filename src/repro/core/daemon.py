@@ -1,0 +1,369 @@
+"""ClusterDaemon — the event-driven service layer over the controller.
+
+The paper runs per-user engine daemons under one always-on control plane;
+its companion papers (*Web-based Interface in Public Cluster*,
+arXiv:0711.0528; *openPC*, arXiv:1012.2499) put a web front-end on top.
+This module is that split's server half: a ``ClusterDaemon`` owns the
+``ClusterController`` (and through it the partitioner, registry, monitor,
+scheduler and event bus) and is the only thing callers talk to — the web
+gateway, the launch drivers and the examples all go through it; nothing
+outside ``repro.core`` constructs a controller directly.
+
+Two execution modes, one API:
+
+* **Background (service) mode** — ``background=True`` starts a pump
+  thread.  Every mutating call from any thread is wrapped in a typed
+  ``Command`` and enqueued; the pump executes commands strictly one at a
+  time and, between commands, drives the periodic ``tick()`` (auto-expiry,
+  waitlist admission, auto-resume, utilization sampling) that callers had
+  to drive by hand before.  Serializing all mutations through one thread
+  is what makes a multi-user HTTP gateway safe to point at the controller
+  without sprinkling locks through the scheduler.
+
+* **Deterministic single-thread mode** — the default.  Calls execute
+  inline on the caller's thread (still serialized by a reentrant lock) and
+  ``tick()`` only runs when invoked, so tests and benchmarks see the exact
+  pre-daemon semantics, model-time ``now=`` plumbing included.
+
+Reads (status, reports, event history) bypass the command queue — they
+touch thread-safe structures (registry lock, monitor lock, event bus) and
+must not queue behind a long-running step command.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.controller import ClusterController
+from repro.core.events import BlockEvent, EventBus
+from repro.core.topology import Topology
+
+
+@dataclasses.dataclass
+class Command:
+    """One serialized mutation: a named controller operation plus its
+    arguments, with a completion event the submitting thread waits on."""
+    name: str
+    args: Tuple = ()
+    kwargs: Dict = dataclasses.field(default_factory=dict)
+    result: Any = None
+    error: Optional[BaseException] = None
+    claimed: bool = False     # pump took it (or the submitter gave up)
+    done: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
+
+
+class ClusterDaemon:
+    #: names accepted by ``call`` — the typed command surface.  Everything
+    #: the gateway or a driver may mutate goes through exactly these.
+    COMMANDS = (
+        "register", "submit", "submit_gang", "review", "confirm",
+        "activate", "run", "run_steps", "step_all", "download", "expire",
+        "preempt", "resume", "resize", "tick", "inject_chip_failure",
+        "save", "restore", "set_quota",
+    )
+
+    def __init__(self, topo: Topology, devices: Optional[Sequence] = None,
+                 ckpt_root: str = "artifacts/ckpt",
+                 state_path: Optional[str] = None,
+                 background: bool = False,
+                 tick_interval_s: float = 0.05):
+        self.ctl = ClusterController(topo, devices=devices,
+                                     ckpt_root=ckpt_root,
+                                     state_path=state_path)
+        self._serial = threading.RLock()      # inline-mode serialization
+        self._cmds: "queue.Queue[Command]" = queue.Queue()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.tick_interval_s = tick_interval_s
+        ctl = self.ctl
+        self._table: Dict[str, Callable] = {
+            "register": ctl.register,
+            "submit": ctl.submit,
+            "submit_gang": ctl.submit_gang,
+            "review": ctl.review,
+            "confirm": ctl.confirm,
+            "activate": ctl.activate,
+            "run": ctl.run,
+            "run_steps": self._run_steps,
+            "step_all": ctl.step_all,
+            "download": ctl.download,
+            "expire": ctl.expire,
+            "preempt": ctl.preempt,
+            "resume": ctl.resume,
+            "resize": ctl.resize_block,
+            "tick": ctl.tick,
+            "inject_chip_failure": ctl.inject_chip_failure,
+            "save": self._save,
+            "restore": self._restore,
+            "set_quota": ctl.scheduler.policy.set_quota,
+        }
+        if background:
+            self.start()
+
+    # ------------------------------------------------------------ lifecycle
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def start(self) -> "ClusterDaemon":
+        """Enter background (service) mode: start the pump thread."""
+        if self.running:
+            return self
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._pump_loop,
+                                        name="cluster-daemon", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self, timeout: float = 10.0) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join(timeout)
+        self._thread = None
+        # fail queued commands instead of leaving their submitters hanging
+        while True:
+            try:
+                cmd = self._cmds.get_nowait()
+            except queue.Empty:
+                break
+            cmd.error = RuntimeError("daemon stopped")
+            cmd.done.set()
+
+    def __enter__(self) -> "ClusterDaemon":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def _pump_loop(self) -> None:
+        last_tick = time.monotonic()
+        while not self._stop.is_set():
+            try:
+                cmd = self._cmds.get(timeout=self.tick_interval_s)
+            except queue.Empty:
+                cmd = None
+            if cmd is not None:
+                with self._serial:
+                    if cmd.claimed or cmd.done.is_set():
+                        continue     # submitter already gave up on it
+                    cmd.claimed = True
+                    try:
+                        cmd.result = self._table[cmd.name](*cmd.args,
+                                                           **cmd.kwargs)
+                    except BaseException as e:   # delivered to the caller
+                        cmd.error = e
+                cmd.done.set()
+            if time.monotonic() - last_tick >= self.tick_interval_s:
+                with self._serial:
+                    try:
+                        self.ctl.tick()
+                    except Exception:
+                        pass   # a tick must never kill the service loop
+                last_tick = time.monotonic()
+
+    # -------------------------------------------------------------- command
+    def call(self, name: str, *args, **kwargs):
+        """Execute one typed command.  Background mode enqueues and waits
+        (mutations run strictly serialized on the pump thread);
+        deterministic mode runs inline on the caller's thread.  Calls
+        *from* the pump thread itself (an event subscriber reacting to a
+        command) run inline too — enqueueing would deadlock."""
+        if name not in self._table:
+            raise ValueError(f"unknown daemon command {name!r}")
+        if not self.running or threading.current_thread() is self._thread:
+            with self._serial:
+                return self._table[name](*args, **kwargs)
+        cmd = Command(name=name, args=args, kwargs=kwargs)
+        self._cmds.put(cmd)
+        # bounded waits: a stop() racing this enqueue (queue drained just
+        # before our put) would otherwise leave the caller parked forever
+        # on a command no thread will ever serve
+        while not cmd.done.wait(0.2):
+            if not self.running:
+                with self._serial:
+                    if not cmd.claimed and not cmd.done.is_set():
+                        # orphaned by the race: run it inline (a later
+                        # start() skips claimed commands)
+                        cmd.claimed = True
+                        return self._table[name](*args, **kwargs)
+        if cmd.error is not None:
+            raise cmd.error
+        return cmd.result
+
+    # ----------------------------------------------------- command bodies
+    def _run_steps(self, targets, max_inflight: Optional[int] = None):
+        return self.ctl.scheduler.run_dispatch(
+            targets, max_inflight=max_inflight)
+
+    def _save(self, app_id: str, async_: bool = False) -> None:
+        self.ctl.runtimes[app_id].save(async_=async_)
+
+    def _restore(self, app_id: str,
+                 step: Optional[int] = None) -> Optional[int]:
+        rt = self.ctl.runtimes[app_id]
+        if rt.ckpt.latest_step() is None:
+            return None
+        return rt.restore(step=step)
+
+    # ------------------------------------------------------ typed wrappers
+    def register(self, *a, **kw) -> str:
+        return self.call("register", *a, **kw)
+
+    def submit(self, *a, **kw):
+        return self.call("submit", *a, **kw)
+
+    def submit_gang(self, *a, **kw):
+        return self.call("submit_gang", *a, **kw)
+
+    def review(self, *a, **kw):
+        return self.call("review", *a, **kw)
+
+    def confirm(self, app_id: str, token: str) -> None:
+        return self.call("confirm", app_id, token)
+
+    def activate(self, app_id: str, job):
+        return self.call("activate", app_id, job)
+
+    def run(self, app_id: str) -> None:
+        return self.call("run", app_id)
+
+    def run_steps(self, targets, max_inflight: Optional[int] = None):
+        """Step RUNNING blocks (``targets``: rounds-per-app mapping or a
+        single int for every running block), event-driven."""
+        return self.call("run_steps", targets, max_inflight=max_inflight)
+
+    def step_all(self, rounds: int = 1, sync_every: int = 1):
+        return self.call("step_all", rounds, sync_every)
+
+    def download(self, app_id: str) -> Dict:
+        return self.call("download", app_id)
+
+    def expire(self, app_id: str, now: Optional[float] = None) -> None:
+        return self.call("expire", app_id, now=now)
+
+    def preempt(self, app_id: str, reason: str = "admin preempt",
+                now: Optional[float] = None) -> None:
+        return self.call("preempt", app_id, reason=reason, now=now)
+
+    def resume(self, app_id: str, n_chips: Optional[int] = None):
+        return self.call("resume", app_id, n_chips=n_chips)
+
+    def resize(self, app_id: str, new_n_chips: int):
+        return self.call("resize", app_id, new_n_chips)
+
+    def tick(self, now: Optional[float] = None) -> List[str]:
+        return self.call("tick", now=now)
+
+    def inject_chip_failure(self, coord, now: Optional[float] = None):
+        return self.call("inject_chip_failure", coord, now=now)
+
+    def save(self, app_id: str, async_: bool = False) -> None:
+        return self.call("save", app_id, async_=async_)
+
+    def restore(self, app_id: str,
+                step: Optional[int] = None) -> Optional[int]:
+        return self.call("restore", app_id, step=step)
+
+    def set_quota(self, user: str, max_chips: Optional[int] = None,
+                  max_chip_seconds: Optional[float] = None):
+        return self.call("set_quota", user, max_chips=max_chips,
+                         max_chip_seconds=max_chip_seconds)
+
+    # ------------------------------------------------------------ reads
+    # (thread-safe structures; never queued behind commands)
+    @property
+    def bus(self) -> EventBus:
+        return self.ctl.bus
+
+    @property
+    def registry(self):
+        return self.ctl.registry
+
+    @property
+    def partitioner(self):
+        return self.ctl.partitioner
+
+    @property
+    def monitor(self):
+        return self.ctl.monitor
+
+    @property
+    def scheduler(self):
+        return self.ctl.scheduler
+
+    @property
+    def runtimes(self):
+        return self.ctl.runtimes
+
+    @property
+    def topo(self) -> Topology:
+        return self.ctl.topo
+
+    def runtime(self, app_id: str):
+        return self.ctl.runtimes.get(app_id)
+
+    def interference_report(self):
+        return self.ctl.interference_report()
+
+    def status(self, app_id: str) -> Dict:
+        """One block's public lifecycle view (what the gateway serves)."""
+        blk = self.ctl.registry.get(app_id)
+        rt = self.ctl.runtimes.get(app_id)
+        return {
+            "app_id": app_id,
+            "user": blk.request.user,
+            "job": blk.request.job_description,
+            "state": blk.state.value,
+            "n_chips": blk.request.n_chips,
+            "priority": blk.request.priority,
+            "deadline_at": blk.deadline_at,
+            "est_steps": blk.request.est_steps,
+            "gang_id": blk.request.gang_id,
+            "block_id": blk.block_id,
+            "coords": list(blk.grant.coords) if blk.grant else None,
+            "mesh_shape": list(blk.grant.mesh_shape) if blk.grant else None,
+            "expires_at": blk.grant.expires_at if blk.grant else None,
+            "queued_at": blk.queued_at,
+            "preempt_count": blk.preempt_count,
+            "failure": blk.failure_reason,
+            "steps": getattr(rt, "step_count", 0) if rt else 0,
+        }
+
+    def list_apps(self, user: Optional[str] = None) -> List[Dict]:
+        reg = self.ctl.registry
+        with reg._lock:
+            ids = [a for a, b in reg.apps.items()
+                   if user is None or b.request.user == user]
+        return [self.status(a) for a in ids]
+
+    def cluster_report(self) -> Dict:
+        topo = self.ctl.topo
+        return {
+            "n_pods": topo.n_pods, "pod_x": topo.pod_x, "pod_y": topo.pod_y,
+            "n_chips": topo.n_chips,
+            "free_chips": self.ctl.partitioner.free_capacity(),
+            # raw waitlist length, not queue_depth(): that would prune —
+            # a mutation — outside the command serialization
+            "queue_depth": len(self.ctl.scheduler.waitlist),
+            "queue": self.ctl.monitor.queue_report(),
+            "deadlines": self.ctl.monitor.deadline_report(),
+            "preemption": self.ctl.monitor.preemption_report(),
+        }
+
+    def events_since(self, after_seq: int = 0,
+                     app_id: Optional[str] = None,
+                     kinds=None, limit: int = 1000) -> List[BlockEvent]:
+        return self.ctl.bus.events_since(after_seq, app_id=app_id,
+                                         kinds=kinds, limit=limit)
+
+    def wait_events(self, after_seq: int = 0,
+                    app_id: Optional[str] = None, kinds=None,
+                    timeout: float = 10.0,
+                    limit: int = 1000) -> List[BlockEvent]:
+        return self.ctl.bus.wait(after_seq, app_id=app_id, kinds=kinds,
+                                 timeout=timeout, limit=limit)

@@ -56,6 +56,43 @@ class Monitor:
                 self.stats[block_id] = BlockStats(block_id)
             return self.stats[block_id]
 
+    # -------------------------------------------------- event subscription
+    def on_event(self, ev) -> None:
+        """EventBus subscriber: translate semantic lifecycle events into
+        the accounting the ``record_*`` API keeps.  The scheduler and
+        controller publish events instead of calling the Monitor directly;
+        this mapping preserves the old call-for-call behavior (e.g. an
+        ``immediate`` admission only records its SLO outcome, exactly like
+        the old bare ``record_deadline`` call did)."""
+        p = ev.payload
+        if ev.kind == "step":
+            self.record_step(ev.block_id, p["step_s"], p["n_chips"],
+                             metrics=p.get("metrics"))
+        elif ev.kind == "enqueued":
+            self.record_enqueue(ev.app_id)
+        elif ev.kind == "dequeued":
+            self.record_dequeue(ev.app_id)
+        elif ev.kind == "admitted":
+            if p.get("immediate"):
+                if p.get("slack_s") is not None:
+                    self.record_deadline(p["slack_s"])
+            else:
+                self.record_admission(ev.app_id, p["wait_s"],
+                                      priority=p.get("priority", 0),
+                                      slack_s=p.get("slack_s"))
+                if p.get("resumed"):
+                    self.record_resume(ev.app_id, p["wait_s"])
+        elif ev.kind == "preempted":
+            self.record_preemption(ev.block_id,
+                                   p.get("progress_lost_steps", 0))
+        elif ev.kind == "utilization":
+            self.sample_utilization(p["used_chips"], p["total_chips"])
+
+    def subscribe_to(self, bus) -> None:
+        bus.subscribe(self.on_event,
+                      kinds={"step", "enqueued", "dequeued", "admitted",
+                             "preempted", "utilization"})
+
     def record_step(self, block_id: str, step_s: float, n_chips: int,
                     metrics: Optional[Dict[str, float]] = None) -> None:
         with self._lock:
@@ -201,6 +238,25 @@ class Monitor:
                 "utilization_now": (self.util_samples[-1]
                                     if self.util_samples else 0.0),
             }
+
+    # -------------------------------------------- completion estimation
+    def step_time_estimate(self, block_id: Optional[str]) -> Optional[float]:
+        """Best per-step service-time estimate for a block: its own EWMA
+        when it has run (e.g. a preempted victim awaiting resume), else the
+        cluster-wide mean EWMA as a prior, else None (nothing has run — the
+        scheduler then falls back to deadline-only slack)."""
+        with self._lock:
+            s = self.stats.get(block_id) if block_id else None
+            if s is not None and s.ewma_step_s:
+                return s.ewma_step_s
+            vals = [st.ewma_step_s for st in self.stats.values()
+                    if st.ewma_step_s]
+            return statistics.mean(vals) if vals else None
+
+    def steps_done(self, block_id: Optional[str]) -> int:
+        with self._lock:
+            s = self.stats.get(block_id) if block_id else None
+            return s.steps if s is not None else 0
 
     # ----------------------------------------------------------- stragglers
     def stragglers(self) -> List[str]:

@@ -51,14 +51,24 @@ class SchedulingPolicy:
 
     ``deadline_ordering=False`` degrades the within-class order back to
     plain FIFO (the PR-1 behavior) — the policy-vs-FIFO comparison knob
-    ``benchmarks/policy_admission.py`` flips.
+    ``benchmarks/policy_admission.py`` flips.  ``completion_aware=False``
+    degrades slack back to pure time-to-deadline (ignoring the estimated
+    remaining service time).  ``preempt_slack_margin_s`` is the headroom
+    below which an on-track deadlined block is exempt from eviction (see
+    ``victim_deadline_exempt``).
     """
 
     def __init__(self, default_quota: Optional[UserQuota] = None,
-                 deadline_ordering: bool = True):
+                 deadline_ordering: bool = True,
+                 completion_aware: bool = True,
+                 deadline_aware_preemption: bool = True,
+                 preempt_slack_margin_s: float = 60.0):
         self.quotas: Dict[str, UserQuota] = {}
         self.default_quota = default_quota or UserQuota()
         self.deadline_ordering = deadline_ordering
+        self.completion_aware = completion_aware
+        self.deadline_aware_preemption = deadline_aware_preemption
+        self.preempt_slack_margin_s = preempt_slack_margin_s
 
     # -------------------------------------------------------------- quotas
     def set_quota(self, user: str, max_chips: Optional[int] = None,
@@ -107,17 +117,53 @@ class SchedulingPolicy:
         deadline-less entries sort after every deadlined one in-class)."""
         return math.inf if deadline_at is None else deadline_at - now
 
-    def waitlist_key(self, entry, held_chips: int, now: float) -> Tuple:
+    def waitlist_key(self, entry, held_chips: int, now: float,
+                     service_s: float = 0.0) -> Tuple:
         """Admission order: priority desc, preempted victims ahead of their
-        fair-share class, fewest held chips, then least deadline slack,
-        then FIFO sequence as the final tie-break."""
+        fair-share class, fewest held chips, then least *effective* slack,
+        then FIFO sequence as the final tie-break.
+
+        Effective slack is time-to-deadline minus the estimated remaining
+        service time (``service_s``, from the requester's declared
+        ``est_steps`` x the Monitor's EWMA step time): two entries with the
+        same deadline no longer tie — the one with more work left is the
+        one actually at risk and goes first."""
         slack = (self.slack(entry.deadline_at, now)
                  if self.deadline_ordering else math.inf)
+        if self.completion_aware and math.isfinite(slack):
+            slack -= service_s
         return (-entry.priority, not entry.preempted, held_chips,
                 slack, entry.seq)
 
+    # ----------------------------------------------------------- preemption
+    def victim_headroom(self, deadline_at: Optional[float], now: float,
+                        est_remaining_s: float = 0.0) -> float:
+        """The victim's own deadline headroom if it kept running: slack
+        minus its estimated remaining service time.  +inf without an SLO."""
+        if deadline_at is None:
+            return math.inf
+        return deadline_at - now - est_remaining_s
+
+    def victim_deadline_exempt(self, deadline_at: Optional[float],
+                               now: float,
+                               est_remaining_s: float = 0.0) -> bool:
+        """Never evict a block into a deadline miss it would not otherwise
+        have had: a victim currently *on track* (headroom >= 0) whose
+        headroom could not absorb an eviction round-trip
+        (< ``preempt_slack_margin_s``) is exempt.  A block already past
+        recovery (headroom < 0) is not protected — eviction creates no
+        *new* miss — and neither is a deadline-less block."""
+        if not self.deadline_aware_preemption or deadline_at is None:
+            return False
+        headroom = deadline_at - now - est_remaining_s
+        return 0.0 <= headroom < self.preempt_slack_margin_s
+
     def victim_key(self, over_quota: bool, priority: int,
-                   progress_lost: int, n_chips: int) -> Tuple:
+                   progress_lost: int, n_chips: int,
+                   headroom_s: float = math.inf) -> Tuple:
         """Eviction rank: quota-busting blocks first, then least important,
-        cheapest-to-stop, smallest."""
-        return (not over_quota, priority, progress_lost, n_chips)
+        most deadline headroom (a deadline-less block sorts ahead of any
+        deadlined one — evicting it risks no SLO), cheapest-to-stop,
+        smallest."""
+        return (not over_quota, priority, -headroom_s, progress_lost,
+                n_chips)

@@ -25,13 +25,27 @@ os.umask(_UMASK)
 
 
 class Registry:
-    def __init__(self, state_path: Optional[str] = None):
+    def __init__(self, state_path: Optional[str] = None, bus=None):
         self._lock = threading.RLock()
         self.apps: Dict[str, Block] = {}
         self._next_id = 1
         self._queue_seq = 0
         self._queue_order: Dict[str, int] = {}   # app_id -> enqueue sequence
         self.state_path = state_path
+        self.bus = bus           # EventBus: every transition becomes a
+                                 # kind="state" event for the live feed
+
+    def _emit(self, app_id: str, note: str = "",
+              now: Optional[float] = None) -> None:
+        """Publish the block's (new) lifecycle state on the event bus —
+        the per-block feed must show *every* transition, including ones no
+        scheduling decision accompanies (confirm, run, done...)."""
+        if self.bus is None:
+            return
+        blk = self.apps[app_id]
+        self.bus.publish("state", app_id=app_id, block_id=blk.block_id,
+                         user=blk.request.user, now=now,
+                         state=blk.state.value, note=note)
 
     # ------------------------------------------------------------ workflow
     def register(self, request: BlockRequest) -> str:
@@ -42,6 +56,11 @@ class Registry:
             self.apps[app_id].history.append(
                 (time.time(), f"registered by {request.user}"))
             self._persist()
+            if self.bus is not None:
+                self.bus.publish("registered", app_id=app_id,
+                                 user=request.user,
+                                 n_chips=request.n_chips,
+                                 job=request.job_description)
             return app_id
 
     def approve(self, app_id: str, grant: BlockGrant) -> None:
@@ -51,6 +70,7 @@ class Registry:
             blk.transition(BlockState.APPROVED,
                            f"{grant.n_chips} chips assigned")
             self._persist()
+            self._emit(app_id, f"{grant.n_chips} chips assigned")
 
     def enqueue(self, app_id: str, note: str = "pod full",
                 now: Optional[float] = None) -> int:
@@ -65,6 +85,7 @@ class Registry:
             self._queue_seq += 1
             self._queue_order[app_id] = self._queue_seq
             self._persist()
+            self._emit(app_id, note, now=now)
             return self._queue_order[app_id]
 
     def mark_preempted(self, app_id: str, note: str,
@@ -90,6 +111,7 @@ class Registry:
             self._queue_seq += 1
             self._queue_order[app_id] = self._queue_seq
             self._persist()
+            self._emit(app_id, note, now=now)
             return self._queue_order[app_id]
 
     def queue_seq(self, app_id: str) -> int:
@@ -107,6 +129,7 @@ class Registry:
         with self._lock:
             self.apps[app_id].transition(BlockState.DENIED, reason)
             self._persist()
+            self._emit(app_id, reason)
 
     def confirm(self, app_id: str, token: str) -> None:
         with self._lock:
@@ -115,11 +138,13 @@ class Registry:
                 raise PermissionError("bad block token")
             blk.transition(BlockState.CONFIRMED, "user reconfirmed")
             self._persist()
+            self._emit(app_id, "user reconfirmed")
 
     def set_state(self, app_id: str, state: BlockState, note: str = "") -> None:
         with self._lock:
             self.apps[app_id].transition(state, note)
             self._persist()
+            self._emit(app_id, note)
 
     # -------------------------------------------------------------- queries
     def get(self, app_id: str) -> Block:

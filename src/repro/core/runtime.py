@@ -44,13 +44,35 @@ class JobSpec:
     kind: str = "train"              # train | serve
     opt: opt_lib.OptConfig = dataclasses.field(default_factory=opt_lib.OptConfig)
     seed: int = 0
+    decode_sample: bool = False      # serve: sample instead of greedy argmax
+    collect_metrics: bool = False    # carry step metrics (loss, grad_norm)
+                                     # through the async window into each
+                                     # completion record (extra host
+                                     # transfers per step — drivers that
+                                     # log per-step opt in)
+    ckpt_namespace: Optional[str] = None  # stable checkpoint namespace so a
+                                          # relaunched driver can --resume;
+                                          # default: the (random) block id
+
+
+@dataclasses.dataclass
+class SimJobSpec:
+    """Device-free stand-in for a JobSpec: activating a block with one
+    boots a ``scheduler.SimRuntime`` (wall-clock step model with the full
+    suspend/resume preemption surface) instead of compiling a real
+    runtime.  The web gateway's ``{"kind": "sim"}`` jobs, the gateway
+    tests and the throughput benchmarks drive the identical lifecycle —
+    admission, dispatch, preemption, expiry — without XLA in the loop."""
+    step_s: float = 0.001
+    ckpt_every: int = 0
 
 
 class BlockRuntime(InflightWindow):
     def __init__(self, grant: BlockGrant, job: JobSpec,
                  devices: Sequence[jax.Device], ckpt_root: str):
         self.job = job
-        self.ckpt = CheckpointManager(ckpt_root, namespace=grant.block_id)
+        self.ckpt = CheckpointManager(
+            ckpt_root, namespace=job.ckpt_namespace or grant.block_id)
         self.state: Any = None
         self.cache: Any = None
         self.step_count = 0
@@ -104,13 +126,21 @@ class BlockRuntime(InflightWindow):
             p_spec = plans.param_specs(params_abs, self.mesh, self.axes)
             self.state_shardings = {"params": plans.to_shardings(p_spec,
                                                                  self.mesh)}
-            dec = serve_lib.make_decode_step(job.cfg)
+            dec = serve_lib.make_decode_step(job.cfg,
+                                             sample=job.decode_sample)
 
-            def fn(params, token, cache, cache_len):
-                with shard_ctx.use(self.ctx):
-                    return dec(params, token, cache, cache_len)
+            if job.decode_sample:
+                def fn(params, token, cache, cache_len, key):
+                    with shard_ctx.use(self.ctx):
+                        return dec(params, token, cache, cache_len, key)
+            else:
+                def fn(params, token, cache, cache_len):
+                    with shard_ctx.use(self.ctx):
+                        return dec(params, token, cache, cache_len)
 
             self._step = jax.jit(fn, donate_argnums=(2,))
+            self._prefill_fn = None   # compiled lazily on first prefill()
+            self._rng = jax.random.PRNGKey(job.seed + 1)
 
     # --------------------------------------------------------------- state
     def init_state(self) -> None:
@@ -132,7 +162,40 @@ class BlockRuntime(InflightWindow):
             self.cache_len = jnp.int32(0)
             self.token = jnp.zeros((job.shape.global_batch, 1), jnp.int32)
 
+    def prefill(self, batch: Dict[str, Any]) -> None:
+        """Serve blocks: process a prompt batch into the KV cache and seed
+        the decode loop with the first generated token (the batched-prefill
+        half of the serving driver, run on the block's own sub-mesh).  The
+        prefill executable is compiled lazily — resume-after-preemption
+        restores the decode context from the checkpoint and never needs
+        it."""
+        assert self.job.kind == "serve", "prefill is a serve-block op"
+        if self._prefill_fn is None:
+            pf = serve_lib.make_prefill_step(self.job.cfg)
+
+            def fn(params, batch, cache):
+                with shard_ctx.use(self.ctx):
+                    return pf(params, batch, cache)
+
+            self._prefill_fn = jax.jit(fn)
+        logits, self.cache = self._prefill_fn(self.state["params"], batch,
+                                              self.cache)
+        self.token = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        self.cache_len = jnp.int32(batch["tokens"].shape[1])
+
     # ---------------------------------------------------------------- step
+    def _decode_once(self):
+        if self.job.decode_sample:
+            self._rng, key = jax.random.split(self._rng)
+            self.token, self.cache = self._step(self.state["params"],
+                                                self.token, self.cache,
+                                                self.cache_len, key)
+        else:
+            self.token, self.cache = self._step(self.state["params"],
+                                                self.token, self.cache,
+                                                self.cache_len)
+        self.cache_len = self.cache_len + 1
+
     def step(self) -> Dict[str, float]:
         t0 = time.perf_counter()
         if self.job.kind == "train":
@@ -140,10 +203,7 @@ class BlockRuntime(InflightWindow):
             self.state, metrics = self._step(self.state, batch)
             metrics = {k: float(v) for k, v in metrics.items()}
         else:
-            self.token, self.cache = self._step(self.state["params"],
-                                                self.token, self.cache,
-                                                self.cache_len)
-            self.cache_len = self.cache_len + 1
+            self._decode_once()
             metrics = {}
         jax.block_until_ready(jax.tree.leaves(self.state)[0])
         self.step_count += 1
@@ -157,10 +217,7 @@ class BlockRuntime(InflightWindow):
             batch = self.data.batch(self.step_count)
             self.state, metrics = self._step(self.state, batch)
         else:
-            self.token, self.cache = self._step(self.state["params"],
-                                                self.token, self.cache,
-                                                self.cache_len)
-            self.cache_len = self.cache_len + 1
+            self._decode_once()
             metrics = {}
         self.step_count += 1
         return metrics
@@ -170,16 +227,38 @@ class BlockRuntime(InflightWindow):
     # InflightWindow; a step's completion token is a device array whose
     # readiness signals the whole step finished
     def _launch(self):
-        self.step_async()
-        return (jax.tree.leaves(self.state)[0]
-                if self.job.kind == "train" else self.token)
+        metrics = self.step_async()
+        # the completion token must be an output the *next* dispatch cannot
+        # donate away: the train state is donated (argnums=0), so a state
+        # leaf from step N is deleted the moment step N+1 dispatches and
+        # its readiness can no longer be polled at window depth >= 2.  The
+        # metrics scalars (and the decode token) are plain outputs of the
+        # same executable — ready exactly when the step is.
+        token = (jax.tree.leaves(metrics)[0]
+                 if self.job.kind == "train" else self.token)
+        if self.job.collect_metrics:
+            # carry the step's metric arrays with the token: they are
+            # outputs of the same executable, so by the time the token is
+            # ready they are too and float() below costs one host transfer
+            return (token, metrics)
+        return token
+
+    @staticmethod
+    def _token_array(token):
+        return token[0] if isinstance(token, tuple) else token
 
     def _token_ready(self, token) -> bool:
-        is_ready = getattr(token, "is_ready", None)
+        is_ready = getattr(self._token_array(token), "is_ready", None)
         return is_ready is None or is_ready()
 
     def _token_wait(self, token) -> None:
-        jax.block_until_ready(token)
+        jax.block_until_ready(self._token_array(token))
+
+    def _completion_record(self, dispatch_t: float, token) -> Dict[str, float]:
+        rec = super()._completion_record(dispatch_t, token)
+        if isinstance(token, tuple):
+            rec.update({k: float(v) for k, v in token[1].items()})
+        return rec
 
     # ----------------------------------------------------------- persist
     def _decode_ctx(self) -> Dict[str, Any]:
@@ -233,6 +312,7 @@ class BlockRuntime(InflightWindow):
         if self.job.kind == "serve":
             self.token = None
             self.cache_len = None
+            self._prefill_fn = None
         self._step = None
         self.mesh = None
         self.devices = []

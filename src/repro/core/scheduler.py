@@ -53,7 +53,20 @@ Two subsystems fix that:
   server): ``Partitioner.allocate_many`` finds every rectangle under one
   lock hold and rolls back on partial failure, the waitlist treats the
   gang as one all-or-nothing unit, and victim selection frees room for
-  the whole gang or evicts nothing.
+  the whole gang or evicts nothing.  Evicted members re-enter the
+  waitlist as a gang unit too, so co-start also holds across evictions.
+
+* **Completion-aware slack** — within a fair-share class, ordering uses
+  *effective* slack: time-to-deadline minus the estimated remaining
+  service time (the request's declared ``est_steps`` x the Monitor's
+  EWMA step time), so ordering reflects time-to-complete, not just
+  time-to-deadline.  Victim selection likewise weighs each candidate's
+  own deadline headroom and never evicts a block into a miss it would
+  not otherwise have had (``SchedulingPolicy.victim_deadline_exempt``).
+
+Scheduling decisions are published on the controller's ``EventBus``
+(``admitted``/``enqueued``/``preempted``/``step``/...); the ``Monitor``
+subscribes instead of being called directly.
 
 ``SimRuntime`` is a wall-clock model of a block's serial step chain used
 by the scheduler benchmarks and tests (no devices required).
@@ -256,8 +269,13 @@ class BlockScheduler:
         if not self.waitlist and quota_reason is None:
             if self._admit_unit(unit, now) is not None:
                 for e in unit:
-                    if e.deadline_at is not None:
-                        self.ctl.monitor.record_deadline(e.deadline_at - now)
+                    blk = self.ctl.registry.get(e.app_id)
+                    slack = (None if e.deadline_at is None
+                             else e.deadline_at - now)
+                    self.ctl.bus.publish(
+                        "admitted", app_id=e.app_id, block_id=blk.block_id,
+                        user=e.user, now=now, immediate=True, wait_s=0.0,
+                        priority=e.priority, slack_s=slack)
                 return True
         note = (f"gang {unit[0].gang_id} waitlisted" if len(unit) > 1
                 else "waitlisted")
@@ -268,7 +286,10 @@ class BlockScheduler:
                 now=now)
             entry.enqueued_at = self.ctl.registry.get(entry.app_id).queued_at
             self.waitlist[entry.app_id] = entry
-            self.ctl.monitor.record_enqueue(entry.app_id)
+            self.ctl.bus.publish("enqueued", app_id=entry.app_id,
+                                 user=entry.user, now=now,
+                                 priority=entry.priority,
+                                 n_chips=entry.n_chips)
         self.pump(now)
         return all(e.app_id not in self.waitlist for e in unit)
 
@@ -313,38 +334,58 @@ class BlockScheduler:
                 return reason
         return None
 
+    def _service_estimate_s(self, entry: QueueEntry) -> float:
+        """Estimated remaining service time for a waitlisted entry: the
+        requester's declared ``est_steps`` (minus steps already run — a
+        preempted victim resumes mid-job) times the Monitor's EWMA step
+        time (the block's own when it has run, else the cluster mean).
+        0.0 when nothing is declared or nothing has ever run, which
+        degrades slack back to pure time-to-deadline."""
+        blk = self.ctl.registry.get(entry.app_id)
+        est = blk.request.est_steps
+        if not est:
+            return 0.0
+        step_s = self.ctl.monitor.step_time_estimate(blk.block_id)
+        if not step_s:
+            return 0.0
+        done = self.ctl.monitor.steps_done(blk.block_id)
+        return max(0, est - done) * step_s
+
+    def _entry_key(self, entry: QueueEntry, held: Dict[str, int],
+                   now: float):
+        return self.policy.waitlist_key(entry, held.get(entry.user, 0),
+                                        now, self._service_estimate_s(entry))
+
     def ordered_waitlist(self, now: Optional[float] = None
                          ) -> List[QueueEntry]:
         """Fair-share admission order (policy's ``waitlist_key``): priority
         desc, then preempted victims ahead of their fair-share class (they
         already earned their slot once and paid an eviction), then fewest
-        chips the user currently holds, then least deadline slack, then
-        FIFO."""
+        chips the user currently holds, then least effective deadline slack
+        (time-to-deadline minus estimated time-to-complete), then FIFO."""
         now = now if now is not None else time.time()
         held = self._held_chips_by_user()
-        return sorted(
-            self.waitlist.values(),
-            key=lambda e: self.policy.waitlist_key(e, held.get(e.user, 0),
-                                                   now))
+        return sorted(self.waitlist.values(),
+                      key=lambda e: self._entry_key(e, held, now))
 
     def _units(self, now: float,
                held: Dict[str, int]) -> List[List[QueueEntry]]:
         """Admission units in fair-share order: singleton entries, plus
         gangs grouped into one all-or-nothing unit ranked by their best
-        member (preempted victims resume individually — co-start atomicity
-        applies to first admission, not to re-admission)."""
+        member.  Preempted gang members re-enter as a gang unit too —
+        co-start holds across evictions, so a half-evicted gang co-resumes
+        instead of trickling back one member at a time."""
         gangs: Dict[str, List[QueueEntry]] = {}
         units: List[List[QueueEntry]] = []
         for e in self.waitlist.values():
-            if e.gang_id is not None and not e.preempted:
+            if e.gang_id is not None:
                 gangs.setdefault(e.gang_id, []).append(e)
             else:
                 units.append([e])
         units.extend(gangs.values())
 
         def unit_key(unit: List[QueueEntry]):
-            return min(self.policy.waitlist_key(e, held.get(e.user, 0), now)
-                       for e in unit)
+            return min(self._entry_key(e, held, now) for e in unit)
 
         units.sort(key=unit_key)
         for unit in units:
@@ -362,7 +403,9 @@ class BlockScheduler:
             priority=blk.request.priority, enqueued_at=blk.queued_at,
             seq=seq, pod=blk.request.pod, preempted=True,
             deadline_at=blk.deadline_at, gang_id=blk.request.gang_id)
-        self.ctl.monitor.record_enqueue(app_id)
+        self.ctl.bus.publish("enqueued", app_id=app_id,
+                             user=blk.request.user, block_id=blk.block_id,
+                             priority=blk.request.priority, preempted=True)
 
     def _try_admit(self, entry: QueueEntry) -> Optional[BlockGrant]:
         try:
@@ -409,12 +452,49 @@ class BlockScheduler:
             raise
         return grants
 
+    def _try_resume_gang(self, unit: List[QueueEntry],
+                         now: Optional[float] = None
+                         ) -> Optional[Dict[str, BlockGrant]]:
+        """Co-resume every preempted member of a gang or none: the dry-run
+        ``can_fit_many`` and the per-member ``resume`` allocations run the
+        same first-fit search in the same order on the same single thread,
+        so after the dry run passes each resume finds its rectangle.  On an
+        unexpected mid-loop failure the already-resumed members are
+        gracefully re-evicted (suspend + requeue), restoring the
+        all-or-nothing property."""
+        part = self.ctl.partitioner
+        if not part.can_fit_many([(e.n_chips, e.pod) for e in unit]):
+            return None
+        grants: Dict[str, BlockGrant] = {}
+        try:
+            for e in unit:
+                grants[e.app_id] = self.ctl.resume(e.app_id)
+        except AllocationError:
+            for a in list(grants):
+                # the member never left the waitlist (entries are removed
+                # only after the whole unit admits), and preempt() ->
+                # requeue_preempted re-adds it — retire the stale entry's
+                # accounting first or queue_depth inflates forever
+                blk = self.ctl.registry.get(a)
+                self.ctl.bus.publish("dequeued", app_id=a,
+                                     user=blk.request.user)
+                self.ctl.preempt(a, reason="gang co-resume rolled back",
+                                 now=now)
+            return None
+        return grants
+
     def _admit_unit(self, unit: List[QueueEntry],
                     now: Optional[float] = None
                     ) -> Optional[Dict[str, BlockGrant]]:
         if len(unit) == 1:
             grant = self._try_admit(unit[0])
             return None if grant is None else {unit[0].app_id: grant}
+        if all(e.preempted for e in unit):
+            # evicted gang members co-resume as one unit (members of a
+            # waitlisted-then-preempted mix cannot occur: a gang is either
+            # entirely queued pre-admission or its evicted subset is
+            # entirely PREEMPTED)
+            return self._try_resume_gang(unit, now=now)
         return self._try_admit_gang(unit, now=now)
 
     def _unit_fits(self, unit: List[QueueEntry]) -> bool:
@@ -435,13 +515,15 @@ class BlockScheduler:
                       else BlockState.QUEUED)
             if self.ctl.registry.get(app_id).state != expect:
                 del self.waitlist[app_id]
-                self.ctl.monitor.record_dequeue(app_id)
+                self.ctl.bus.publish("dequeued", app_id=app_id,
+                                     user=entry.user)
                 if entry.gang_id is not None and not entry.preempted:
                     pruned_gangs.add(entry.gang_id)
         for app_id, entry in list(self.waitlist.items()):
             if entry.gang_id in pruned_gangs and not entry.preempted:
                 del self.waitlist[app_id]
-                self.ctl.monitor.record_dequeue(app_id)
+                self.ctl.bus.publish("dequeued", app_id=app_id,
+                                     user=entry.user)
                 self.ctl.registry.deny(
                     app_id, f"gang {entry.gang_id} member withdrawn")
 
@@ -475,10 +557,12 @@ class BlockScheduler:
                     # deadline hit/miss was recorded at first admission
                     slack = (None if e.deadline_at is None or e.preempted
                              else e.deadline_at - now)
-                    self.ctl.monitor.record_admission(
-                        e.app_id, wait_s, priority=e.priority, slack_s=slack)
-                    if e.preempted:
-                        self.ctl.monitor.record_resume(e.app_id, wait_s)
+                    blk = self.ctl.registry.get(e.app_id)
+                    self.ctl.bus.publish(
+                        "admitted", app_id=e.app_id, block_id=blk.block_id,
+                        user=e.user, now=now, wait_s=wait_s,
+                        priority=e.priority, slack_s=slack,
+                        resumed=e.preempted)
                     admitted.append(e.app_id)
                 progress = True
                 break    # holdings changed: recompute fair-share order
@@ -501,7 +585,7 @@ class BlockScheduler:
         for unit in self._units(now, held):
             if self._quota_blocked(unit, held, used) is not None:
                 continue     # never evict for a unit quota forbids admitting
-            victims = self._select_victims(unit, held, used)
+            victims = self._select_victims(unit, held, used, now)
             if not victims:
                 continue
             label = (unit[0].gang_id if len(unit) > 1 else unit[0].app_id)
@@ -513,21 +597,39 @@ class BlockScheduler:
             return True
         return False
 
+    def _victim_remaining_s(self, blk) -> float:
+        """Estimated service time the victim still needs (declared
+        ``est_steps`` minus steps run, times its EWMA step time); 0.0 when
+        undeclared — its deadline slack then stands in alone."""
+        est = blk.request.est_steps
+        if not est or blk.block_id is None:
+            return 0.0
+        step_s = self.ctl.monitor.step_time_estimate(blk.block_id)
+        if not step_s:
+            return 0.0
+        done = self.ctl.monitor.steps_done(blk.block_id)
+        return max(0, est - done) * step_s
+
     def _select_victims(self, unit: List[QueueEntry],
                         held: Dict[str, int],
-                        used: Dict[str, float]) -> List[str]:
+                        used: Dict[str, float],
+                        now: Optional[float] = None) -> List[str]:
         """Victim choice for an admission unit: among running/active blocks
         of *strictly* lower priority than every member (the no-churn guard
         — equal-priority blocks can never evict each other in a loop),
         ranked by the policy's victim key — quota-busting blocks first,
-        then (priority, progress-lost = steps since the victim's last
-        checkpoint, held chips): least important, cheapest-to-stop,
-        smallest.  Prefer a single victim whose chips let the whole unit
+        then (priority, deadline headroom desc, progress-lost = steps since
+        the victim's last checkpoint, held chips): least important, least
+        SLO-pressured, cheapest-to-stop, smallest.  A victim the eviction
+        would push into a deadline miss it would not otherwise have had
+        (on-track, headroom under the policy margin) is exempt entirely.
+        Prefer a single victim whose chips let the whole unit
         fit; a footprint spanning several smaller blocks gets the shortest
         rank-order prefix of victims that frees enough contiguous room for
         *every* member (gang admission evicts for the whole gang or not at
         all).  Returns [] (and nothing is evicted) when even the full
         eligible set would not make the unit fit."""
+        now = now if now is not None else time.time()
         reg = self.ctl.registry
         part = self.ctl.partitioner
         floor = min(e.priority for e in unit)
@@ -537,13 +639,20 @@ class BlockScheduler:
             blk = reg.get(app_id)
             if blk.grant is None or blk.request.priority >= floor:
                 continue
+            remaining_s = self._victim_remaining_s(blk)
+            if self.policy.victim_deadline_exempt(blk.deadline_at, now,
+                                                  remaining_s):
+                continue
             rt = self.ctl.runtimes.get(app_id)
             progress_lost = int(getattr(rt, "progress_lost", 0) or 0)
             over = self.policy.over_quota(
                 blk.request.user, held.get(blk.request.user, 0),
                 used.get(blk.request.user, 0.0))
-            key = self.policy.victim_key(over, blk.request.priority,
-                                         progress_lost, blk.grant.n_chips)
+            key = self.policy.victim_key(
+                over, blk.request.priority, progress_lost,
+                blk.grant.n_chips,
+                headroom_s=self.policy.victim_headroom(
+                    blk.deadline_at, now, remaining_s))
             eligible.append((key, app_id, blk.grant.block_id))
         eligible.sort()
         for _, app_id, block_id in eligible:
@@ -589,8 +698,13 @@ class BlockScheduler:
 
         def on_step(app_id: str, rec: Dict[str, float]) -> None:
             blk = reg.get(app_id)
-            self.ctl.monitor.record_step(blk.block_id, rec["step_s"],
-                                         blk.grant.n_chips)
+            metrics = {k: v for k, v in rec.items() if k != "step_s"}
+            self.ctl.bus.publish("step", app_id=app_id,
+                                 block_id=blk.block_id,
+                                 user=blk.request.user,
+                                 step_s=rec["step_s"],
+                                 n_chips=blk.grant.n_chips,
+                                 metrics=metrics or None)
 
         return drive(runtimes, targets,
                      max_inflight=max_inflight or self.max_inflight,

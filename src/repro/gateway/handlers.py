@@ -1,0 +1,370 @@
+"""Gateway request handlers: the HTTP/JSON surface of the block lifecycle.
+
+Routes (all JSON in/out, ``Authorization: Bearer <session token>``):
+
+  ``POST /v1/register``              step (1): register an application
+  ``POST /v1/submit``                register + automated admission
+  ``POST /v1/gangs``                 atomic multi-block (gang) submission
+  ``POST /v1/blocks/<id>/review``    step (2), admin: assign a block
+  ``POST /v1/blocks/<id>/confirm``   step (3): reconfirm w/ capability token
+  ``POST /v1/blocks/<id>/activate``  step (4): boot the runtime (job spec)
+  ``POST /v1/blocks/<id>/run``       step (5): start the job
+  ``POST /v1/blocks/<id>/steps``     drive N steps (event-driven dispatch)
+  ``GET  /v1/blocks/<id>``           step (6): monitor one block
+  ``GET  /v1/blocks/<id>/events``    step (6): long-poll live event feed
+  ``GET  /v1/blocks/<id>/download``  step (7): collect results
+  ``POST /v1/blocks/<id>/preempt``   admin: evict (checkpoint + release)
+  ``POST /v1/blocks/<id>/resume``    admin: re-admit a preempted block
+  ``POST /v1/blocks/<id>/resize``    admin: elastic grow/shrink
+  ``POST /v1/blocks/<id>/expire``    owner/admin: end the usage period
+  ``GET  /v1/blocks``                my blocks (admin: everyone's)
+  ``GET  /v1/cluster``               pod inventory + monitor reports
+  ``GET  /v1/events``                admin: global event feed (long-poll)
+  ``GET  /v1/profile``               who am I / my session configuration
+
+Request defaults (priority, deadline, duration) come from the caller's
+session profile when a submission omits them — the paper's per-user
+configuration files.  Job specs are dicts: ``{"kind": "sim", "step_s":
+0.01}`` boots the device-free simulator; ``{"kind": "train"|"serve",
+"arch": "xlstm_350m", ...}`` builds a real ``JobSpec``.
+"""
+from __future__ import annotations
+
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.partition import AllocationError
+from repro.core.runtime import JobSpec, SimJobSpec
+from repro.gateway import auth
+from repro.gateway.auth import AuthError
+from repro.gateway.profiles import ProfileStore, UserProfile
+
+MAX_LONGPOLL_S = 30.0
+
+
+class ApiError(Exception):
+    def __init__(self, status: int, message: str):
+        super().__init__(message)
+        self.status = status
+        self.message = message
+
+
+def parse_job(spec: Optional[Dict]):
+    """Job-spec dict -> SimJobSpec / JobSpec (None passes through: the
+    block is admitted without auto-activation)."""
+    if spec is None:
+        return None
+    if not isinstance(spec, dict) or "kind" not in spec:
+        raise ApiError(400, "job must be a dict with a 'kind'")
+    kind = spec["kind"]
+    if kind == "sim":
+        return SimJobSpec(step_s=float(spec.get("step_s", 0.001)),
+                          ckpt_every=int(spec.get("ckpt_every", 0)))
+    if kind not in ("train", "serve"):
+        raise ApiError(400, f"unknown job kind {kind!r}")
+    # real runtimes: resolve the architecture config lazily (importing the
+    # model zoo is heavy; sim-only deployments never pay it)
+    import repro.configs as configs
+    from repro.models.config import ShapeConfig
+    from repro.train.optimizer import OptConfig
+    arch = spec.get("arch")
+    if not arch:
+        raise ApiError(400, f"{kind} job needs an 'arch'")
+    try:
+        cfg = (configs.get_smoke(arch) if spec.get("smoke", True)
+               else configs.get(arch))
+    except KeyError:
+        raise ApiError(400, f"unknown arch {arch!r}")
+    shape = ShapeConfig(
+        spec.get("shape_name", "gw"),
+        "train" if kind == "train" else "serve",
+        seq_len=int(spec.get("seq_len", 128)),
+        global_batch=int(spec.get("global_batch", 4)),
+        microbatch=int(spec.get("microbatch", 1)))
+    opt = OptConfig(lr=float(spec.get("lr", 3e-4)),
+                    warmup_steps=int(spec.get("warmup_steps", 2)),
+                    total_steps=int(spec.get("total_steps", 100)))
+    return JobSpec(cfg, shape, kind=kind, opt=opt,
+                   seed=int(spec.get("seed", 0)))
+
+
+def _grant_dict(grant) -> Optional[Dict]:
+    if grant is None:
+        return None
+    return {"block_id": grant.block_id, "coords": list(grant.coords),
+            "mesh_shape": list(grant.mesh_shape), "token": grant.token,
+            "expires_at": grant.expires_at}
+
+
+class GatewayApi:
+    """Routes HTTP requests onto the ClusterDaemon's typed command API.
+
+    Stateless between requests: the daemon serializes every mutation
+    through its command queue, so concurrent users are safe by
+    construction; handlers only decide *who may ask for what*.
+    """
+
+    ROUTES: List[Tuple[str, "re.Pattern", str]] = [
+        (m, re.compile(p), fn) for m, p, fn in [
+            ("GET", r"^/v1/ping$", "ping"),
+            ("GET", r"^/v1/profile$", "profile"),
+            ("GET", r"^/v1/cluster$", "cluster"),
+            ("POST", r"^/v1/register$", "register"),
+            ("POST", r"^/v1/submit$", "submit"),
+            ("POST", r"^/v1/gangs$", "submit_gang"),
+            ("GET", r"^/v1/blocks$", "list_blocks"),
+            ("GET", r"^/v1/blocks/(?P<app_id>[\w-]+)$", "block_status"),
+            ("GET", r"^/v1/blocks/(?P<app_id>[\w-]+)/events$",
+             "block_events"),
+            ("GET", r"^/v1/blocks/(?P<app_id>[\w-]+)/download$",
+             "download"),
+            ("POST", r"^/v1/blocks/(?P<app_id>[\w-]+)/review$", "review"),
+            ("POST", r"^/v1/blocks/(?P<app_id>[\w-]+)/confirm$",
+             "confirm"),
+            ("POST", r"^/v1/blocks/(?P<app_id>[\w-]+)/activate$",
+             "activate"),
+            ("POST", r"^/v1/blocks/(?P<app_id>[\w-]+)/run$", "run"),
+            ("POST", r"^/v1/blocks/(?P<app_id>[\w-]+)/steps$", "steps"),
+            ("POST", r"^/v1/blocks/(?P<app_id>[\w-]+)/preempt$",
+             "preempt"),
+            ("POST", r"^/v1/blocks/(?P<app_id>[\w-]+)/resume$", "resume"),
+            ("POST", r"^/v1/blocks/(?P<app_id>[\w-]+)/resize$", "resize"),
+            ("POST", r"^/v1/blocks/(?P<app_id>[\w-]+)/expire$", "expire"),
+            ("GET", r"^/v1/events$", "global_events"),
+        ]
+    ]
+
+    def __init__(self, daemon, profiles: ProfileStore):
+        self.daemon = daemon
+        self.profiles = profiles
+        # the paper's per-user configuration becomes live policy
+        profiles.apply_quotas(daemon.scheduler.policy)
+
+    # --------------------------------------------------------------- router
+    def handle(self, method: str, path: str, query: Dict[str, str],
+               headers: Dict[str, str], body: bytes) -> Tuple[int, Dict]:
+        try:
+            payload = json.loads(body.decode() or "{}") if method == "POST" \
+                else {}
+        except (ValueError, UnicodeDecodeError):
+            return 400, {"error": "request body is not valid JSON"}
+        for m, pat, name in self.ROUTES:
+            if m != method:
+                continue
+            match = pat.match(path)
+            if match is None:
+                continue
+            try:
+                if name == "ping":           # liveness probe: no auth
+                    return 200, {"ok": True}
+                profile = auth.require_user(headers, self.profiles)
+                return getattr(self, name)(profile, match.groupdict(),
+                                           payload, query)
+            except (AuthError, ApiError) as e:
+                return e.status, {"error": e.message}
+            except KeyError as e:
+                return 404, {"error": f"unknown application {e}"}
+            except (AllocationError, ValueError, PermissionError,
+                    AssertionError) as e:
+                # AllocationError: pod-full is an expected, retryable
+                # conflict, not an internal error
+                return 409, {"error": str(e)}
+        return 404, {"error": f"no route for {method} {path}"}
+
+    # ---------------------------------------------------------- block access
+    def _owned_block(self, profile: UserProfile, app_id: str):
+        blk = self.daemon.registry.get(app_id)      # KeyError -> 404
+        auth.require_owner(profile, blk.request.user)
+        return blk
+
+    def _status_for(self, profile: UserProfile, app_id: str) -> Dict:
+        blk = self._owned_block(profile, app_id)
+        st = self.daemon.status(app_id)
+        # the block capability token is part of the owner's view (they
+        # need it for the confirm step) but never anyone else's
+        st["token"] = blk.grant.token if blk.grant else None
+        return st
+
+    # ------------------------------------------------------------- handlers
+    def profile(self, profile, path_args, body, query):
+        return 200, {"profile": profile.public()}
+
+    def cluster(self, profile, path_args, body, query):
+        return 200, self.daemon.cluster_report()
+
+    def _submission_kwargs(self, profile: UserProfile, body: Dict) -> Dict:
+        """Merge the request with the user's profile defaults.  All values
+        are coerced (a JSON string where a number belongs must fail *this*
+        request, not poison the waitlist for everyone), and a non-admin
+        cannot outrank their own profile's priority — the profile is the
+        per-user configuration the gateway enforces, not a suggestion."""
+        priority = int(body.get("priority", profile.priority))
+        if not profile.admin:
+            priority = min(priority, profile.priority)
+        deadline_s = (body["deadline_s"] if "deadline_s" in body
+                      else profile.deadline_s)
+        est_steps = body.get("est_steps")
+        try:
+            return {
+                "priority": priority,
+                "duration_s": float(body.get("duration_s",
+                                             profile.duration_s)),
+                "deadline_s": (None if deadline_s is None
+                               else float(deadline_s)),
+                "est_steps": (None if est_steps is None
+                              else int(est_steps)),
+            }
+        except (TypeError, ValueError) as e:
+            raise ApiError(400, f"bad submission field: {e}")
+
+    def register(self, profile, path_args, body, query):
+        if "n_chips" not in body:
+            raise ApiError(400, "n_chips is required")
+        kw = self._submission_kwargs(profile, body)
+        app_id = self.daemon.register(
+            profile.user, body.get("job_description", ""),
+            int(body["n_chips"]), arch=body.get("arch", ""), **kw)
+        return 201, {"app_id": app_id,
+                     "state": self.daemon.status(app_id)["state"]}
+
+    def submit(self, profile, path_args, body, query):
+        if "n_chips" not in body:
+            raise ApiError(400, "n_chips is required")
+        kw = self._submission_kwargs(profile, body)
+        app_id, grant = self.daemon.submit(
+            profile.user, body.get("job_description", ""),
+            int(body["n_chips"]), job=parse_job(body.get("job")), **kw)
+        return 201, {"app_id": app_id, "admitted": grant is not None,
+                     "grant": _grant_dict(grant),
+                     "state": self.daemon.status(app_id)["state"]}
+
+    def submit_gang(self, profile, path_args, body, query):
+        members = body.get("members")
+        if not members or not isinstance(members, list):
+            raise ApiError(400, "members must be a non-empty list")
+        tuples = []
+        for m in members:
+            if "n_chips" not in m:
+                raise ApiError(400, "every gang member needs n_chips")
+            tuples.append((m.get("job_description", ""),
+                           int(m["n_chips"]), parse_job(m.get("job"))))
+        kw = self._submission_kwargs(profile, body)
+        kw.pop("est_steps", None)         # gang-level estimate unsupported
+        app_ids, grants = self.daemon.submit_gang(profile.user, tuples,
+                                                  **kw)
+        return 201, {
+            "app_ids": app_ids, "admitted": grants is not None,
+            "grants": ({a: _grant_dict(g) for a, g in grants.items()}
+                       if grants else None)}
+
+    def list_blocks(self, profile, path_args, body, query):
+        user = None if profile.admin else profile.user
+        return 200, {"blocks": self.daemon.list_apps(user=user)}
+
+    def block_status(self, profile, path_args, body, query):
+        return 200, self._status_for(profile, path_args["app_id"])
+
+    def review(self, profile, path_args, body, query):
+        auth.require_admin(profile)
+        grant = self.daemon.review(
+            path_args["app_id"], approve=bool(body.get("approve", True)),
+            n_chips=body.get("n_chips"), pod=body.get("pod"))
+        return 200, {"approved": grant is not None,
+                     "grant": _grant_dict(grant)}
+
+    def confirm(self, profile, path_args, body, query):
+        app_id = path_args["app_id"]
+        self._owned_block(profile, app_id)
+        if "token" not in body:
+            raise ApiError(400, "confirm needs the block capability token")
+        self.daemon.confirm(app_id, body["token"])
+        return 200, {"state": self.daemon.status(app_id)["state"]}
+
+    def activate(self, profile, path_args, body, query):
+        app_id = path_args["app_id"]
+        self._owned_block(profile, app_id)
+        job = parse_job(body.get("job"))
+        if job is None:
+            raise ApiError(400, "activate needs a job spec")
+        self.daemon.activate(app_id, job)
+        return 200, {"state": self.daemon.status(app_id)["state"]}
+
+    def run(self, profile, path_args, body, query):
+        app_id = path_args["app_id"]
+        self._owned_block(profile, app_id)
+        self.daemon.run(app_id)
+        return 200, {"state": self.daemon.status(app_id)["state"]}
+
+    def steps(self, profile, path_args, body, query):
+        app_id = path_args["app_id"]
+        self._owned_block(profile, app_id)
+        rounds = int(body.get("rounds", 1))
+        if rounds < 1 or rounds > 10000:
+            raise ApiError(400, "rounds must be in [1, 10000]")
+        out = self.daemon.run_steps({app_id: rounds},
+                                    max_inflight=body.get("max_inflight"))
+        recs = out.get(app_id, [])
+        return 200, {"completed": len(recs),
+                     "records": recs[-10:],
+                     "steps": self.daemon.status(app_id)["steps"]}
+
+    def preempt(self, profile, path_args, body, query):
+        auth.require_admin(profile)
+        self.daemon.preempt(path_args["app_id"],
+                            reason=body.get("reason",
+                                            f"admin {profile.user}"))
+        return 200, {"state": self.daemon.status(
+            path_args["app_id"])["state"]}
+
+    def resume(self, profile, path_args, body, query):
+        auth.require_admin(profile)
+        grant = self.daemon.resume(path_args["app_id"],
+                                   n_chips=body.get("n_chips"))
+        return 200, {"grant": _grant_dict(grant)}
+
+    def resize(self, profile, path_args, body, query):
+        auth.require_admin(profile)
+        if "n_chips" not in body:
+            raise ApiError(400, "resize needs n_chips")
+        self.daemon.resize(path_args["app_id"], int(body["n_chips"]))
+        return 200, self.daemon.status(path_args["app_id"])
+
+    def expire(self, profile, path_args, body, query):
+        app_id = path_args["app_id"]
+        self._owned_block(profile, app_id)
+        self.daemon.expire(app_id)
+        return 200, {"state": self.daemon.status(app_id)["state"]}
+
+    def download(self, profile, path_args, body, query):
+        app_id = path_args["app_id"]
+        self._owned_block(profile, app_id)
+        return 200, self.daemon.download(app_id)
+
+    # ------------------------------------------------------------ event feed
+    def _feed(self, query: Dict[str, str],
+              app_id: Optional[str]) -> Tuple[int, Dict]:
+        after = int(query.get("after", 0))
+        timeout = min(float(query.get("timeout_s", 0.0)), MAX_LONGPOLL_S)
+        kinds = (set(query["kinds"].split(","))
+                 if query.get("kinds") else None)
+        if timeout > 0:
+            evs = self.daemon.wait_events(after, app_id=app_id,
+                                          kinds=kinds, timeout=timeout)
+        else:
+            evs = self.daemon.events_since(after, app_id=app_id,
+                                           kinds=kinds)
+        # no events -> cursor unchanged: advancing past unmatched seqs
+        # could skip a matching event racing the poll
+        next_after = evs[-1].seq if evs else after
+        return 200, {"events": [e.to_dict() for e in evs],
+                     "next_after": next_after}
+
+    def block_events(self, profile, path_args, body, query):
+        app_id = path_args["app_id"]
+        self._owned_block(profile, app_id)
+        return self._feed(query, app_id)
+
+    def global_events(self, profile, path_args, body, query):
+        auth.require_admin(profile)
+        return self._feed(query, None)

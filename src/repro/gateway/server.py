@@ -1,0 +1,103 @@
+"""Threaded stdlib HTTP server hosting the GatewayApi.
+
+``ThreadingHTTPServer`` gives each connection its own thread, which is
+what makes the long-poll event feed workable: a client parked on
+``GET /v1/blocks/<id>/events?timeout_s=20`` holds only its own thread
+while other users' requests proceed.  Mutations are safe regardless of
+thread count because every one funnels into the ClusterDaemon's command
+queue and executes on the single pump thread.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import urllib.parse
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Optional
+
+from repro.gateway.handlers import GatewayApi
+from repro.gateway.profiles import ProfileStore
+
+
+class _Handler(BaseHTTPRequestHandler):
+    api: GatewayApi = None            # injected by GatewayServer
+    protocol_version = "HTTP/1.1"     # keep-alive (Content-Length always set)
+    quiet = True
+
+    def log_message(self, fmt, *args):   # noqa: D102 - silence per-request
+        if not self.quiet:
+            super().log_message(fmt, *args)
+
+    def _dispatch(self, method: str) -> None:
+        parsed = urllib.parse.urlsplit(self.path)
+        query = {k: v[0] for k, v in
+                 urllib.parse.parse_qs(parsed.query).items()}
+        length = int(self.headers.get("Content-Length") or 0)
+        body = self.rfile.read(length) if length else b""
+        try:
+            status, obj = self.api.handle(method, parsed.path, query,
+                                          dict(self.headers), body)
+        except Exception as e:          # defensive: a handler bug must not
+            status, obj = 500, {"error": f"internal error: {e}"}
+        data = json.dumps(obj, default=str).encode()
+        self.send_response(status)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(data)))
+        self.end_headers()
+        self.wfile.write(data)
+
+    def do_GET(self) -> None:
+        self._dispatch("GET")
+
+    def do_POST(self) -> None:
+        self._dispatch("POST")
+
+
+class GatewayServer:
+    """Bind-and-serve wrapper: ``GatewayServer(daemon, profiles).start()``.
+
+    ``port=0`` binds an ephemeral port (tests/benchmarks); read ``url``
+    after construction.  ``stop()`` shuts the listener down and joins the
+    serving thread; the daemon is left running (the caller owns it).
+    """
+
+    def __init__(self, daemon, profiles: ProfileStore,
+                 host: str = "127.0.0.1", port: int = 0):
+        api = GatewayApi(daemon, profiles)
+        handler = type("GatewayHandler", (_Handler,), {"api": api})
+        self.httpd = ThreadingHTTPServer((host, port), handler)
+        self.httpd.daemon_threads = True
+        self._thread: Optional[threading.Thread] = None
+
+    @property
+    def host(self) -> str:
+        return self.httpd.server_address[0]
+
+    @property
+    def port(self) -> int:
+        return self.httpd.server_address[1]
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def start(self) -> "GatewayServer":
+        if self._thread is None or not self._thread.is_alive():
+            self._thread = threading.Thread(
+                target=self.httpd.serve_forever, name="gateway-http",
+                daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self.httpd.shutdown()
+        self.httpd.server_close()
+        if self._thread is not None:
+            self._thread.join(5.0)
+            self._thread = None
+
+    def __enter__(self) -> "GatewayServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

@@ -1,4 +1,8 @@
-"""Serving driver: batched prefill + autoregressive decode on real devices.
+"""Serving driver: batched prefill + autoregressive decode — run as a
+serve-kind block through the ClusterDaemon service layer (register ->
+admit -> activate -> prefill -> decode steps -> download), so the CLI
+exercises the same lifecycle, dispatcher and monitoring as any other
+tenant of the public cluster.
 
   PYTHONPATH=src python -m repro.launch.serve --arch deepseek_7b --smoke \
       --batch 4 --prompt-len 64 --gen 32
@@ -13,10 +17,11 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.configs as configs
+from repro.core.daemon import ClusterDaemon
+from repro.core.runtime import JobSpec
+from repro.core.topology import Topology
 from repro.data import pipeline
-from repro.models import model as model_lib
 from repro.models.config import ShapeConfig
-from repro.serve import serve_step as serve_lib
 
 
 def main(argv=None) -> int:
@@ -35,39 +40,50 @@ def main(argv=None) -> int:
     if cfg.is_encoder:
         raise SystemExit("encoder-only arch has no decode path")
     B, P, G = args.batch, args.prompt_len, args.gen
-    smax = P + G
-    key = jax.random.PRNGKey(args.seed)
-    params = model_lib.init_params(cfg, key)
 
-    shape = ShapeConfig("cli", "prefill", seq_len=P, global_batch=B)
+    n_dev = len(jax.devices())
+    topo = Topology(n_pods=1, pod_x=n_dev, pod_y=1)
+    daemon = ClusterDaemon(topo, ckpt_root="artifacts/serve_ckpt")
+    # cache sized for prompt + generation; the block's decode step and
+    # (lazy) prefill both compile on its granted sub-mesh
+    job = JobSpec(cfg, ShapeConfig("cli", "serve", seq_len=P + G,
+                                   global_batch=B),
+                  kind="serve", seed=args.seed, decode_sample=args.sample)
+    app_id, grant = daemon.submit("cli", f"serve {cfg.name}", n_dev,
+                                  job=job)
+    assert grant is not None, "single-tenant pod must admit immediately"
+    rt = daemon.runtime(app_id)
+
+    prompt_shape = ShapeConfig("cli", "prefill", seq_len=P, global_batch=B)
     batch = {k: jnp.asarray(v) for k, v in pipeline.synthetic_batch(
-        cfg, shape, step=0, seed=args.seed).items() if k != "labels"}
-
-    cache = model_lib.init_cache(cfg, B, smax)
-    prefill = jax.jit(serve_lib.make_prefill_step(cfg))
-    decode = jax.jit(serve_lib.make_decode_step(cfg, sample=args.sample))
+        cfg, prompt_shape, step=0, seed=args.seed).items()
+        if k != "labels"}
 
     t0 = time.time()
-    logits, cache = prefill(params, batch, cache)
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    jax.block_until_ready(tok)
+    rt.prefill(batch)
+    jax.block_until_ready(rt.token)
     t_prefill = time.time() - t0
 
-    out_tokens = [tok]
+    out_tokens = [np.asarray(rt.token)]
     t0 = time.time()
-    for i in range(G - 1):
-        tok, cache = decode(params, tok, cache, jnp.int32(P + i))
-        out_tokens.append(tok)
-    jax.block_until_ready(tok)
+    for _ in range(G - 1):
+        # one dispatch round per generated token so every token is
+        # collected (decode is a serial chain — no parallelism is lost)
+        daemon.run_steps({app_id: 1})
+        out_tokens.append(np.asarray(rt.token))
     t_decode = time.time() - t0
 
-    gen = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
-    print(f"# arch={cfg.name} batch={B} prompt={P} gen={G}")
+    gen = np.concatenate(out_tokens, axis=1)
+    res = daemon.download(app_id)
+    print(f"# arch={cfg.name} batch={B} prompt={P} gen={G} "
+          f"block={grant.block_id}")
     print(f"# prefill: {t_prefill*1e3:.1f} ms "
           f"({B*P/t_prefill:.0f} tok/s)")
     print(f"# decode:  {t_decode*1e3:.1f} ms "
-          f"({B*(G-1)/max(t_decode,1e-9):.0f} tok/s)")
+          f"({B*(G-1)/max(t_decode,1e-9):.0f} tok/s) "
+          f"steps={res['steps']}")
     print("# first generations:", gen[:2, :10].tolist())
+    daemon.expire(app_id)
     return 0
 
 

@@ -1,9 +1,9 @@
-"""End-to-end training driver (single block, real execution).
-
-Runs a reduced or full architecture config for N steps on the available
-devices with the production plan machinery: sharded state, synthetic data
-pipeline, async checkpointing, monitoring.  Used by the examples and the
-~100M-scale end-to-end run in EXPERIMENTS.md.
+"""End-to-end training driver (single block, real execution) — runs
+through the ClusterDaemon service layer: the job is registered, admitted
+and activated as a block (the full paper lifecycle), stepped through the
+event-driven dispatcher, and monitored via the event bus, exactly like a
+tenant of the public cluster.  Nothing here constructs a controller
+directly.
 
   PYTHONPATH=src python -m repro.launch.train --arch xlstm_350m --steps 200 \
       --seq-len 256 --global-batch 8 --smoke
@@ -11,22 +11,17 @@ pipeline, async checkpointing, monitoring.  Used by the examples and the
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 import repro.configs as configs
-from repro.checkpoint.manager import CheckpointManager
-from repro.data import pipeline
+from repro.core.daemon import ClusterDaemon
+from repro.core.runtime import JobSpec
+from repro.core.topology import Topology
 from repro.models import model as model_lib
 from repro.models.config import ShapeConfig
-from repro.sharding import ctx as shard_ctx
-from repro.sharding import plans
 from repro.train import optimizer as opt_lib
-from repro.train import train_step as train_lib
 
 
 def main(argv=None) -> int:
@@ -51,68 +46,71 @@ def main(argv=None) -> int:
     shape = ShapeConfig("cli", "train", seq_len=args.seq_len,
                         global_batch=args.global_batch,
                         microbatch=args.microbatch)
-    opt_cfg = opt_lib.OptConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+    opt_cfg = opt_lib.OptConfig(lr=args.lr,
+                                warmup_steps=max(args.steps // 20, 1),
                                 total_steps=args.steps)
 
+    # one block spanning every available device, granted by the daemon
     n_dev = len(jax.devices())
-    mesh = jax.make_mesh((n_dev, 1), ("data", "model")) if n_dev > 1 else \
-        jax.make_mesh((1, 1), ("data", "model"))
-    axes = plans.MeshAxes(dp=("data",), model="model")
-    ctx = shard_ctx.ShardCtx(mesh, ("data",), "model")
-
-    state_abs = train_lib.abstract_train_state(cfg, opt_cfg)
-    p_spec = plans.param_specs(state_abs["params"], mesh, axes)
-    state_spec = {"params": p_spec,
-                  "opt": plans.opt_state_specs(state_abs["opt"], p_spec)}
-    state_sh = plans.to_shardings(state_spec, mesh)
-    batch_abs = pipeline.input_specs(cfg, shape)
-    batch_sh = plans.to_shardings(
-        plans.batch_specs(batch_abs, mesh, axes), mesh)
-
-    step_fn = train_lib.make_train_step(cfg, shape, opt_cfg)
-
-    def fn(state, batch):
-        with shard_ctx.use(ctx):
-            return step_fn(state, batch)
-
-    jstep = jax.jit(fn, in_shardings=(state_sh, batch_sh),
-                    out_shardings=(state_sh, None), donate_argnums=(0,))
-    init = jax.jit(lambda k: train_lib.make_train_state(cfg, k, opt_cfg),
-                   out_shardings=state_sh)
-    state = init(jax.random.PRNGKey(args.seed))
-    n_params = model_lib.count_params(state["params"])
+    topo = Topology(n_pods=1, pod_x=n_dev, pod_y=1)
+    daemon = ClusterDaemon(topo,
+                           ckpt_root=args.ckpt_dir or "artifacts/train_ckpt")
+    job = JobSpec(cfg, shape, opt=opt_cfg, seed=args.seed,
+                  collect_metrics=True,
+                  # stable namespace so --resume finds earlier runs
+                  ckpt_namespace=cfg.name if args.ckpt_dir else None)
+    app_id, grant = daemon.submit("cli", f"train {cfg.name}", n_dev,
+                                  job=job)
+    assert grant is not None, "single-tenant pod must admit immediately"
+    rt = daemon.runtime(app_id)
+    n_params = model_lib.count_params(rt.state["params"])
     print(f"# arch={cfg.name} params={n_params/1e6:.2f}M devices={n_dev} "
+          f"block={grant.block_id} "
           f"tokens/step={shape.global_batch * shape.seq_len}")
 
-    ckpt = None
     start_step = 0
-    if args.ckpt_dir:
-        ckpt = CheckpointManager(args.ckpt_dir, namespace=cfg.name)
-        if args.resume and ckpt.latest_step() is not None:
-            state, start_step = ckpt.restore(state, shardings=state_sh)
+    if args.ckpt_dir and args.resume:
+        at = daemon.restore(app_id)
+        if at is not None:
+            start_step = rt.step_count
             print(f"# resumed from step {start_step}")
 
-    data = pipeline.DataIterator(cfg, shape, seed=args.seed,
-                                 shardings=batch_sh)
     losses = []
-    t_start = time.time()
-    for step in range(start_step, args.steps):
-        batch = data.batch(step)
-        state, metrics = jstep(state, batch)
+
+    def on_step(ev):
+        """Event-bus monitoring: each completed step carries its metrics
+        (collect_metrics=True) through the async dispatch window."""
+        p = ev.payload
+        m = p.get("metrics") or {}
+        step = daemon.monitor.steps_done(ev.block_id) + start_step - 1
+        if "loss" in m:
+            losses.append(m["loss"])
         if step % args.log_every == 0 or step == args.steps - 1:
-            loss = float(metrics["loss"])
-            losses.append(loss)
-            print(f"step {step:5d} loss {loss:8.4f} "
-                  f"gnorm {float(metrics['grad_norm']):8.3f} "
-                  f"lr {float(metrics['lr']):.2e}", flush=True)
-        if ckpt and args.ckpt_every and (step + 1) % args.ckpt_every == 0:
-            ckpt.save_async(step + 1, state)
-    if ckpt:
-        ckpt.wait()
+            print(f"step {step:5d} loss {m.get('loss', float('nan')):8.4f} "
+                  f"gnorm {m.get('grad_norm', float('nan')):8.3f} "
+                  f"lr {m.get('lr', 0.0):.2e}", flush=True)
+
+    daemon.bus.subscribe(on_step, kinds={"step"})
+
+    t_start = time.time()
+    done = start_step
+    while done < args.steps:
+        chunk = min(args.ckpt_every or args.steps, args.steps - done)
+        daemon.run_steps({app_id: chunk})
+        done += chunk
+        if args.ckpt_dir and args.ckpt_every:
+            daemon.save(app_id, async_=True)
     wall = time.time() - t_start
-    tok_s = (args.steps - start_step) * shape.global_batch * shape.seq_len / wall
-    print(f"# done: {wall:.1f}s, {tok_s:.0f} tok/s, "
-          f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+
+    rt.ckpt.wait()                # an async save may still be landing
+    res = daemon.download(app_id)
+    tok_s = ((args.steps - start_step) * shape.global_batch *
+             shape.seq_len / wall)
+    loss_span = (f"loss {losses[0]:.4f} -> {losses[-1]:.4f}"
+                 if losses else "loss n/a")
+    print(f"# done: {wall:.1f}s, {tok_s:.0f} tok/s, {loss_span}, "
+          f"checkpoints={res['checkpoints']}")
+    daemon.expire(app_id)
     return 0
 
 

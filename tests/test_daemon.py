@@ -1,0 +1,187 @@
+"""ClusterDaemon service layer + event bus: command serialization in both
+execution modes, the registry's per-transition state events, and the
+Monitor-as-subscriber equivalence with the old direct-call accounting."""
+import threading
+import time
+
+import jax
+import pytest
+
+from repro.core.block import BlockState
+from repro.core.daemon import ClusterDaemon
+from repro.core.events import EventBus
+from repro.core.runtime import SimJobSpec
+from repro.core.topology import Topology
+
+
+def make_daemon(tmp_path, pod_x=4, pod_y=2, **kw):
+    topo = Topology(n_pods=1, pod_x=pod_x, pod_y=pod_y)
+    dev = jax.devices()[0]
+    return ClusterDaemon(topo, devices=[dev] * topo.n_chips,
+                         ckpt_root=str(tmp_path / "ckpt"), **kw)
+
+
+SIM = SimJobSpec(step_s=0.001, ckpt_every=2)
+
+
+# --------------------------------------------------------------- event bus
+
+def test_event_bus_orders_filters_and_replays():
+    bus = EventBus(history=3)
+    got = []
+    bus.subscribe(lambda ev: got.append(ev.kind), kinds={"admitted"})
+    for i in range(3):
+        bus.publish("state", app_id=f"a{i}", state="queued")
+    bus.publish("admitted", app_id="a0", wait_s=0.0)
+    assert got == ["admitted"]                   # kind filter on subscribe
+    assert bus.latest_seq == 4
+    evs = bus.events_since(0)
+    assert [e.seq for e in evs] == [2, 3, 4]     # ring evicted seq 1
+    assert [e.seq for e in bus.events_since(0, app_id="a1")] == [2]
+    assert bus.events_since(4) == []
+    ev = evs[-1]
+    assert ev.to_dict()["wait_s"] == 0.0
+
+    bus.unsubscribe(got.append)                  # not registered: no-op
+    blocker = bus.wait(after_seq=4, timeout=0.05)
+    assert blocker == []                         # times out empty
+
+    def later():
+        time.sleep(0.05)
+        bus.publish("admitted", app_id="a9")
+
+    t = threading.Thread(target=later)
+    t.start()
+    woke = bus.wait(after_seq=4, timeout=5.0)
+    t.join()
+    assert [e.app_id for e in woke] == ["a9"]
+
+
+def test_event_uses_model_time_when_given():
+    bus = EventBus()
+    ev = bus.publish("admitted", app_id="a", now=123.0)
+    assert ev.t == 123.0
+
+
+# ----------------------------------------------------- monitor subscription
+
+def test_monitor_accounting_driven_entirely_by_events(tmp_path):
+    """The Monitor no longer gets called by scheduler/controller — every
+    number in its reports must arrive via bus events and match the old
+    direct-call behavior (admission waits, preemption counts, resumes,
+    utilization, per-step EWMA)."""
+    d = make_daemon(tmp_path)
+    mon = d.monitor
+    lo, g = d.submit("alice", "victim", 8, job=SIM, priority=0)
+    assert g is not None
+    d.run_steps({lo: 4})
+    bid = d.registry.get(lo).block_id
+    assert mon.stats[bid].steps == 4             # step events -> EWMA
+    assert mon.stats[bid].ewma_step_s is not None
+    hi, g2 = d.submit("bob", "urgent", 8, job=SIM, priority=5, now=50.0)
+    assert g2 is not None                        # preempted alice
+    assert mon.preempted_total == 1
+    assert mon.queue_depth == 1                  # alice parked for resume
+    d.registry.get(hi).grant.expires_at = 51.0
+    d.tick(now=60.0)                             # expire bob, resume alice
+    assert mon.resumed_total == 1
+    assert mon.resume_waits[-1] == 10.0          # model clock end to end
+    assert mon.queue_depth == 0
+    assert mon.util_samples                      # tick published a sample
+    rep = mon.preemption_report()
+    assert rep["preempted_total"] == 1 and rep["resumed_total"] == 1
+
+
+def test_registry_emits_state_event_for_every_transition(tmp_path):
+    d = make_daemon(tmp_path)
+    app, grant = d.submit("alice", "watched", 4)
+    d.confirm(app, grant.token)
+    d.activate(app, SIM)
+    d.run(app)
+    d.download(app)
+    d.expire(app)
+    states = [e.payload["state"]
+              for e in d.bus.events_since(0, app_id=app)
+              if e.kind == "state"]
+    assert states == ["approved", "confirmed", "active", "running",
+                      "done", "expired"]
+    kinds = [e.kind for e in d.bus.events_since(0, app_id=app)]
+    assert kinds[0] == "registered"
+    assert "admitted" in kinds
+
+
+# ------------------------------------------------------------ daemon modes
+
+def test_deterministic_mode_runs_inline_with_model_time(tmp_path):
+    """Default mode: no thread, caller-driven tick, now= plumbing intact —
+    the exact pre-daemon semantics tests and benchmarks rely on."""
+    d = make_daemon(tmp_path)
+    assert not d.running
+    filler, _ = d.submit("zed", "filler", 8, now=100.0)
+    q, g = d.submit("bob", "queued", 8, deadline_s=50.0, now=100.0)
+    assert g is None
+    d.registry.get(filler).grant.expires_at = 109.0
+    d.tick(now=110.0)
+    assert d.registry.get(q).state == BlockState.APPROVED
+    assert d.monitor.queue_waits[-1] == 10.0
+
+
+def test_background_mode_serializes_commands_from_many_threads(tmp_path):
+    """Service mode: concurrent submitters all funnel through the pump
+    thread; admissions + waitlist stay consistent and the partitioner
+    invariants hold."""
+    d = make_daemon(tmp_path, background=True, tick_interval_s=0.01)
+    try:
+        results = {}
+
+        def submit(i):
+            results[i] = d.submit(f"user{i}", f"job {i}", 4, job=SIM)
+
+        threads = [threading.Thread(target=submit, args=(i,))
+                   for i in range(6)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        admitted = [a for a, g in results.values() if g is not None]
+        assert len(admitted) == 2                # 8 chips / 4 each
+        d.partitioner.check_invariants()
+        # the pump auto-admits the rest as earlier blocks expire
+        for a in admitted:
+            d.expire(a)
+        deadline = time.monotonic() + 5.0
+        while time.monotonic() < deadline:
+            states = {a: d.registry.get(a).state
+                      for a, _ in results.values()}
+            if sum(s == BlockState.RUNNING for s in states.values()) == 2:
+                break
+            time.sleep(0.02)
+        else:
+            raise AssertionError(f"pump never admitted the queue: {states}")
+    finally:
+        d.stop()
+    assert not d.running
+
+
+def test_command_errors_propagate_to_caller(tmp_path):
+    d = make_daemon(tmp_path, background=True)
+    try:
+        with pytest.raises(KeyError):
+            d.download("app_nope")
+        with pytest.raises(ValueError):
+            d.call("not_a_command")
+    finally:
+        d.stop()
+
+
+def test_daemon_status_and_reports(tmp_path):
+    d = make_daemon(tmp_path)
+    app, grant = d.submit("alice", "status me", 4, job=SIM, priority=2)
+    st = d.status(app)
+    assert st["state"] == "running" and st["n_chips"] == 4
+    assert st["block_id"] == grant.block_id and st["priority"] == 2
+    assert [b["app_id"] for b in d.list_apps(user="alice")] == [app]
+    assert d.list_apps(user="nobody") == []
+    rep = d.cluster_report()
+    assert rep["n_chips"] == 8 and rep["free_chips"] == 4
+    assert rep["queue_depth"] == 0

@@ -1,0 +1,256 @@
+"""Web gateway end-to-end: the full paper lifecycle over real HTTP against
+a live background ClusterDaemon (2 users, oversubscribed pod,
+submit -> admit -> preempt -> resume -> download over the wire), token
+auth/ownership rejection, and event-feed ordering/long-poll."""
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import jax
+import pytest
+
+from repro.core.block import BlockState
+from repro.core.daemon import ClusterDaemon
+from repro.core.topology import Topology
+from repro.gateway import GatewayServer, ProfileStore, UserProfile
+
+SIM = {"kind": "sim", "step_s": 0.001, "ckpt_every": 2}
+
+
+@pytest.fixture
+def gw(tmp_path):
+    """Background daemon + HTTP gateway on an 8-chip pod, two users with
+    distinct profiles plus an admin."""
+    topo = Topology(n_pods=1, pod_x=4, pod_y=2)
+    dev = jax.devices()[0]
+    daemon = ClusterDaemon(topo, devices=[dev] * topo.n_chips,
+                           ckpt_root=str(tmp_path / "ckpt"),
+                           background=True, tick_interval_s=0.01)
+    profiles = ProfileStore([
+        UserProfile("alice", "tok-alice", priority=0),
+        UserProfile("bob", "tok-bob", priority=5, deadline_s=60.0),
+        UserProfile("root", "tok-admin", admin=True),
+    ])
+    server = GatewayServer(daemon, profiles).start()
+    yield server, daemon
+    server.stop()
+    daemon.stop()
+
+
+def req(server, method, path, token=None, body=None, timeout=15):
+    r = urllib.request.Request(server.url + path, method=method,
+                               data=(json.dumps(body).encode()
+                                     if body is not None else None))
+    if token:
+        r.add_header("Authorization", f"Bearer {token}")
+    try:
+        with urllib.request.urlopen(r, timeout=timeout) as resp:
+            return resp.status, json.loads(resp.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read())
+
+
+def wait_state(server, app_id, token, state, timeout=5.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        _, st = req(server, "GET", f"/v1/blocks/{app_id}", token)
+        if st["state"] == state:
+            return st
+        time.sleep(0.02)
+    raise AssertionError(f"{app_id} never reached {state}")
+
+
+# ------------------------------------------------------------- lifecycle
+
+def test_full_lifecycle_two_users_preempt_resume_download(gw):
+    """Oversubscribed pod over the wire: alice fills it, high-priority bob
+    evicts her, runs to completion and downloads; alice auto-resumes via
+    the daemon's pump thread — every hop a real HTTP request."""
+    server, daemon = gw
+    s, a = req(server, "POST", "/v1/submit", "tok-alice",
+               {"job_description": "fill", "n_chips": 8, "job": SIM})
+    assert s == 201 and a["admitted"] and a["state"] == "running"
+    app_a = a["app_id"]
+    assert a["grant"]["block_id"].startswith("blk_")
+    req(server, "POST", f"/v1/blocks/{app_a}/steps", "tok-alice",
+        {"rounds": 4})
+
+    # bob's profile priority (5) outranks alice: submit into the full pod
+    # preempts her instead of queueing him
+    s, b = req(server, "POST", "/v1/submit", "tok-bob",
+               {"job_description": "urgent", "n_chips": 8, "job": SIM})
+    assert s == 201 and b["admitted"]
+    app_b = b["app_id"]
+    _, st_a = req(server, "GET", f"/v1/blocks/{app_a}", "tok-alice")
+    assert st_a["state"] == "preempted"
+    assert st_a["preempt_count"] == 1
+
+    s, stepped = req(server, "POST", f"/v1/blocks/{app_b}/steps",
+                     "tok-bob", {"rounds": 5})
+    assert s == 200 and stepped["steps"] == 5
+    s, res = req(server, "GET", f"/v1/blocks/{app_b}/download", "tok-bob")
+    assert s == 200 and res["steps"] == 5
+    s, ex = req(server, "POST", f"/v1/blocks/{app_b}/expire", "tok-bob",
+                {})
+    assert s == 200 and ex["state"] == "expired"
+
+    # the background pump's tick auto-resumes alice — no client call
+    st_a = wait_state(server, app_a, "tok-alice", "running")
+    assert st_a["steps"] == 4                      # checkpointed progress
+    s, res_a = req(server, "GET", f"/v1/blocks/{app_a}/download",
+                   "tok-alice")
+    assert s == 200 and res_a["steps"] == 4
+    req(server, "POST", f"/v1/blocks/{app_a}/expire", "tok-alice", {})
+    daemon.partitioner.check_invariants()
+
+
+def test_explicit_workflow_review_confirm_activate(gw):
+    """The paper's admin-in-the-loop path: register -> admin review ->
+    confirm with the block capability token -> activate -> run."""
+    server, _ = gw
+    s, r = req(server, "POST", "/v1/register", "tok-alice",
+               {"job_description": "manual", "n_chips": 4})
+    assert s == 201 and r["state"] == "requested"
+    app = r["app_id"]
+    # non-admin review is refused; admin's succeeds
+    s, _ = req(server, "POST", f"/v1/blocks/{app}/review", "tok-alice", {})
+    assert s == 403
+    s, rv = req(server, "POST", f"/v1/blocks/{app}/review", "tok-admin",
+                {})
+    assert s == 200 and rv["approved"]
+    # wrong capability token is a 409 (PermissionError), right one goes
+    s, _ = req(server, "POST", f"/v1/blocks/{app}/confirm", "tok-alice",
+               {"token": "nope"})
+    assert s == 409
+    s, st = req(server, "GET", f"/v1/blocks/{app}", "tok-alice")
+    s, cf = req(server, "POST", f"/v1/blocks/{app}/confirm", "tok-alice",
+                {"token": st["token"]})
+    assert s == 200 and cf["state"] == "confirmed"
+    s, _ = req(server, "POST", f"/v1/blocks/{app}/activate", "tok-alice",
+               {"job": SIM})
+    assert s == 200
+    s, rn = req(server, "POST", f"/v1/blocks/{app}/run", "tok-alice", {})
+    assert s == 200 and rn["state"] == "running"
+    req(server, "POST", f"/v1/blocks/{app}/expire", "tok-alice", {})
+
+
+def test_gang_submit_over_the_wire(gw):
+    server, daemon = gw
+    s, g = req(server, "POST", "/v1/gangs", "tok-alice", {
+        "members": [{"job_description": "t", "n_chips": 4, "job": SIM},
+                    {"job_description": "e", "n_chips": 4, "job": SIM}]})
+    assert s == 201 and g["admitted"] and len(g["app_ids"]) == 2
+    for a in g["app_ids"]:
+        blk = daemon.registry.get(a)
+        assert blk.state == BlockState.RUNNING
+        assert blk.request.gang_id is not None
+    for a in g["app_ids"]:
+        req(server, "POST", f"/v1/blocks/{a}/expire", "tok-alice", {})
+
+
+# ------------------------------------------------------------------- auth
+
+def test_auth_rejection(gw):
+    server, _ = gw
+    s, e = req(server, "GET", "/v1/profile")                # no token
+    assert s == 401 and "token" in e["error"]
+    s, _ = req(server, "GET", "/v1/profile", "tok-wrong")   # unknown token
+    assert s == 401
+    # ownership: bob cannot read, step or expire alice's block
+    _, a = req(server, "POST", "/v1/submit", "tok-alice",
+               {"job_description": "mine", "n_chips": 4, "job": SIM})
+    app = a["app_id"]
+    for method, path, body in [
+            ("GET", f"/v1/blocks/{app}", None),
+            ("POST", f"/v1/blocks/{app}/steps", {"rounds": 1}),
+            ("POST", f"/v1/blocks/{app}/expire", {}),
+            ("GET", f"/v1/blocks/{app}/download", None)]:
+        s, e = req(server, method, path, "tok-bob", body)
+        assert s == 403, (path, s, e)
+    # admin-only surfaces refuse plain users
+    for path in ["/v1/events", f"/v1/blocks/{app}/preempt"]:
+        method = "POST" if "preempt" in path else "GET"
+        s, _ = req(server, method, path, "tok-alice",
+                   {} if method == "POST" else None)
+        assert s == 403
+    # admin *can* read alice's block and the global feed
+    s, _ = req(server, "GET", f"/v1/blocks/{app}", "tok-admin")
+    assert s == 200
+    s, _ = req(server, "GET", "/v1/events", "tok-admin")
+    assert s == 200
+    # users only see their own blocks in the listing; admin sees all
+    _, mine = req(server, "GET", "/v1/blocks", "tok-bob")
+    assert all(b["user"] == "bob" for b in mine["blocks"])
+    _, every = req(server, "GET", "/v1/blocks", "tok-admin")
+    assert any(b["app_id"] == app for b in every["blocks"])
+    req(server, "POST", f"/v1/blocks/{app}/expire", "tok-alice", {})
+
+
+def test_profile_priority_cap_and_field_coercion(gw):
+    """A non-admin cannot outrank their own profile priority, and a
+    malformed numeric field fails that request with a 400 instead of
+    poisoning the shared waitlist."""
+    server, daemon = gw
+    s, a = req(server, "POST", "/v1/submit", "tok-alice",
+               {"job_description": "sneaky", "n_chips": 4,
+                "priority": 100, "job": SIM})
+    assert s == 201
+    assert daemon.registry.get(a["app_id"]).request.priority == 0
+    s, b = req(server, "POST", "/v1/submit", "tok-bob",
+               {"job_description": "modest", "n_chips": 4,
+                "priority": 3, "job": SIM})   # below bob's profile 5: ok
+    assert daemon.registry.get(b["app_id"]).request.priority == 3
+    s, e = req(server, "POST", "/v1/submit", "tok-alice",
+               {"job_description": "typo", "n_chips": 4,
+                "est_steps": "ten"})
+    assert s == 400 and "bad submission field" in e["error"]
+    for app, tok in [(a["app_id"], "tok-alice"), (b["app_id"], "tok-bob")]:
+        req(server, "POST", f"/v1/blocks/{app}/expire", tok, {})
+
+
+# ------------------------------------------------------------ event feed
+
+def test_event_feed_ordering_and_longpoll(gw):
+    server, _ = gw
+    _, a = req(server, "POST", "/v1/submit", "tok-alice",
+               {"job_description": "watched", "n_chips": 4, "job": SIM})
+    app = a["app_id"]
+    req(server, "POST", f"/v1/blocks/{app}/steps", "tok-alice",
+        {"rounds": 2})
+    _, page = req(server, "GET", f"/v1/blocks/{app}/events", "tok-alice")
+    evs = page["events"]
+    seqs = [e["seq"] for e in evs]
+    assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs)
+    assert all(e["app_id"] == app for e in evs)
+    # lifecycle transitions arrive in paper order on the block's feed
+    states = [e["state"] for e in evs if e["kind"] == "state"]
+    assert states == ["approved", "confirmed", "active", "running"]
+    assert [e["kind"] for e in evs].count("step") == 2
+    assert page["next_after"] == seqs[-1]
+
+    # cursor resume: nothing before/at the cursor is replayed
+    _, page2 = req(server, "GET",
+                   f"/v1/blocks/{app}/events?after={page['next_after']}",
+                   "tok-alice")
+    assert page2["events"] == []
+
+    # long-poll: a request parked on the feed returns as soon as another
+    # thread causes the next transition
+    def expire_later():
+        time.sleep(0.2)
+        req(server, "POST", f"/v1/blocks/{app}/expire", "tok-alice", {})
+
+    t = threading.Thread(target=expire_later)
+    t.start()
+    t0 = time.monotonic()
+    _, page3 = req(server, "GET",
+                   f"/v1/blocks/{app}/events"
+                   f"?after={page['next_after']}&timeout_s=10",
+                   "tok-alice")
+    waited = time.monotonic() - t0
+    t.join()
+    assert page3["events"], "long-poll returned empty despite a transition"
+    assert any(e.get("state") == "expired" for e in page3["events"])
+    assert waited < 5.0, "long-poll did not wake on the event"

@@ -569,6 +569,192 @@ def test_priority_classes_keyed_by_value():
     assert rep["p50_wait_high_s"] == 2.0             # aggregate of p1 + p5
 
 
+# ----------------------------------- admission-time completion estimates
+
+def test_completion_estimate_orders_same_deadline_by_remaining_work(tmp_path):
+    """Two queued entries with identical deadlines: the one with more
+    declared work (est_steps x EWMA step time) has less *effective* slack
+    and is admitted first; completion_aware=False restores the tie ->
+    FIFO."""
+    ctl = make_ctl(tmp_path)                         # 8 chips
+    filler = submit_running(ctl, "zed", 8)
+    bid = ctl.registry.get(filler).block_id
+    ctl.monitor.record_step(bid, step_s=1.0, n_chips=8)  # cluster EWMA 1.0
+    c, _ = ctl.submit("carol", "short job", 8, deadline_s=10000.0,
+                      est_steps=5)
+    b, _ = ctl.submit("bob", "long job", 8, deadline_s=10000.0,
+                      est_steps=100)
+    order = [e.app_id for e in ctl.scheduler.ordered_waitlist()]
+    assert order == [b, c]           # 100 steps of work beats FIFO
+    ctl.scheduler.policy.completion_aware = False
+    order = [e.app_id for e in ctl.scheduler.ordered_waitlist()]
+    assert order == [c, b]           # deadline-only slack ties -> FIFO
+
+
+def test_completion_estimate_uses_preempted_blocks_own_ewma(tmp_path):
+    """A preempted victim's estimate uses its *own* observed EWMA and only
+    the steps it has left, not the cluster prior."""
+    ctl = make_ctl(tmp_path)
+    lo = submit_running(ctl, "alice", 8)
+    ctl.registry.get(lo).request.est_steps = 100
+    bid = ctl.registry.get(lo).block_id
+    for _ in range(10):
+        ctl.monitor.record_step(bid, step_s=2.0, n_chips=8)
+    hi, g = ctl.submit("eve", "urgent", 8, priority=5)    # evicts alice
+    assert g is not None
+    entry = ctl.scheduler.waitlist[lo]
+    # 100 declared - 10 done = 90 remaining at its own 2.0s EWMA
+    assert ctl.scheduler._service_estimate_s(entry) == pytest.approx(180.0)
+
+
+def test_no_estimate_without_declared_steps_or_history(tmp_path):
+    """No est_steps, or no EWMA anywhere yet -> estimate 0.0 (pure
+    deadline slack; benchmarks/policy_admission.py results unchanged)."""
+    ctl = make_ctl(tmp_path)
+    filler = submit_running(ctl, "zed", 8)
+    q, _ = ctl.submit("bob", "undeclared", 8, deadline_s=100.0)
+    entry = ctl.scheduler.waitlist[q]
+    assert ctl.scheduler._service_estimate_s(entry) == 0.0
+    ctl.registry.get(q).request.est_steps = 50       # declared, no history
+    assert ctl.scheduler._service_estimate_s(entry) == 0.0
+
+
+# ----------------------------------------------- deadline-aware preemption
+
+def submit_running_deadlined(ctl, user, n_chips, deadline_s, now,
+                             priority=0):
+    app_id, grant = ctl.submit(user, f"{user} job", n_chips,
+                               priority=priority, deadline_s=deadline_s,
+                               now=now)
+    assert grant is not None, f"{user} did not fit"
+    ctl.confirm(app_id, grant.token)
+    ctl.registry.set_state(app_id, BlockState.ACTIVE)
+    ctl.registry.set_state(app_id, BlockState.RUNNING)
+    ctl.runtimes[app_id] = SimRuntime(0.001)
+    return app_id
+
+
+def test_victim_selection_spares_on_track_tight_deadline_block(tmp_path):
+    """Two candidate victims; the one on track for a deadline it could no
+    longer make after an eviction (headroom < margin) is exempt, so the
+    loose-deadline one is evicted instead — even though both otherwise
+    rank identically."""
+    ctl = make_ctl(tmp_path, pod_x=4, pod_y=4)       # 16 chips
+    tight = submit_running_deadlined(ctl, "dana", 8, deadline_s=30.0,
+                                     now=1000.0)     # headroom 30 < 60
+    loose = submit_running_deadlined(ctl, "erin", 8, deadline_s=5000.0,
+                                     now=1000.0)
+    hi, g = ctl.submit("carol", "urgent", 8, priority=5, now=1001.0)
+    assert g is not None
+    assert ctl.registry.get(loose).state == BlockState.PREEMPTED
+    assert ctl.registry.get(tight).state == BlockState.RUNNING
+
+
+def test_no_eviction_when_every_victim_would_newly_miss(tmp_path):
+    """All candidates exempt -> the high-priority waiter queues instead of
+    pushing an on-track block into a miss it would not have had."""
+    ctl = make_ctl(tmp_path)                         # 8 chips
+    tight = submit_running_deadlined(ctl, "dana", 8, deadline_s=30.0,
+                                     now=1000.0)
+    hi, g = ctl.submit("carol", "urgent", 8, priority=5, now=1001.0)
+    assert g is None
+    assert ctl.registry.get(hi).state == BlockState.QUEUED
+    assert ctl.registry.get(tight).state == BlockState.RUNNING
+    assert ctl.monitor.preemption_report()["preempted_total"] == 0
+
+
+def test_already_missing_victim_is_not_protected(tmp_path):
+    """A victim already past its deadline gains no exemption — eviction
+    creates no *new* miss."""
+    ctl = make_ctl(tmp_path)
+    late = submit_running_deadlined(ctl, "dana", 8, deadline_s=5.0,
+                                    now=1000.0)      # misses at t=1005
+    hi, g = ctl.submit("carol", "urgent", 8, priority=5, now=2000.0)
+    assert g is not None
+    assert ctl.registry.get(late).state == BlockState.PREEMPTED
+
+
+def test_exemption_accounts_for_estimated_remaining_work(tmp_path):
+    """A distant deadline still exempts the victim when its declared
+    remaining work eats the slack (headroom = slack - est remaining)."""
+    ctl = make_ctl(tmp_path)
+    v = submit_running_deadlined(ctl, "dana", 8, deadline_s=500.0,
+                                 now=1000.0)
+    blk = ctl.registry.get(v)
+    blk.request.est_steps = 120                      # 120 x 4.0s = 480s
+    for _ in range(5):
+        ctl.monitor.record_step(blk.block_id, step_s=4.0, n_chips=8)
+    # headroom at t=1001: 499 - (115 remaining x 4.0 = 460) = 39 < 60
+    hi, g = ctl.submit("carol", "urgent", 8, priority=5, now=1001.0)
+    assert g is None
+    assert ctl.registry.get(v).state == BlockState.RUNNING
+
+
+def test_deadline_aware_preemption_can_be_disabled(tmp_path):
+    ctl = make_ctl(tmp_path)
+    ctl.scheduler.policy.deadline_aware_preemption = False
+    tight = submit_running_deadlined(ctl, "dana", 8, deadline_s=30.0,
+                                     now=1000.0)
+    hi, g = ctl.submit("carol", "urgent", 8, priority=5, now=1001.0)
+    assert g is not None                             # old behavior
+    assert ctl.registry.get(tight).state == BlockState.PREEMPTED
+
+
+# ------------------------------------------------------ gang resume re-gang
+
+def test_preempted_gang_resumes_as_one_unit(tmp_path):
+    """An evicted gang re-enters the waitlist as a unit: it never resumes
+    into capacity that fits only one member, and co-resumes the moment the
+    whole footprint fits."""
+    ctl = make_ctl(tmp_path, pod_x=4, pod_y=4)       # 16 chips
+    app_ids, grants = ctl.submit_gang(
+        "alice", [("trainer", 4), ("eval", 4)])
+    assert grants is not None
+    for a in app_ids:
+        ctl.confirm(a, grants[a].token)
+        ctl.registry.set_state(a, BlockState.ACTIVE)
+        ctl.registry.set_state(a, BlockState.RUNNING)
+        ctl.runtimes[a] = SimRuntime(0.001)
+    bob = submit_running(ctl, "bob", 4)
+    dave = submit_running(ctl, "dave", 4)            # pod full
+    hi, g = ctl.submit("carol", "urgent", 8, priority=5)
+    assert g is not None
+    # cheapest sufficient set = the two 4-chip gang members
+    for a in app_ids:
+        assert ctl.registry.get(a).state == BlockState.PREEMPTED
+    ctl.expire(bob)                                  # 4 free: half the gang
+    for a in app_ids:                                # no solo resume
+        assert ctl.registry.get(a).state == BlockState.PREEMPTED
+    ctl.expire(dave)                                 # 8 free: whole gang
+    for a in app_ids:
+        assert ctl.registry.get(a).state == BlockState.RUNNING
+    ctl.partitioner.check_invariants()
+
+
+def test_single_evicted_gang_member_resumes_alone(tmp_path):
+    """Co-resume binds the *evicted subset*: when only one member was
+    preempted (siblings kept running), it resumes by itself."""
+    ctl = make_ctl(tmp_path, pod_x=4, pod_y=4)       # 16 chips
+    app_ids, grants = ctl.submit_gang(
+        "alice", [("trainer", 4), ("eval", 8)])
+    assert grants is not None
+    for a in app_ids:
+        ctl.confirm(a, grants[a].token)
+        ctl.registry.set_state(a, BlockState.ACTIVE)
+        ctl.registry.set_state(a, BlockState.RUNNING)
+        ctl.runtimes[a] = SimRuntime(0.001)
+    trainer, eval_srv = app_ids
+    bob = submit_running(ctl, "bob", 4)              # pod full
+    ctl.runtimes[bob].step_count = 5                 # pricier to stop
+    hi, g = ctl.submit("carol", "urgent", 4, priority=5)
+    assert g is not None                             # evicts the trainer
+    assert ctl.registry.get(trainer).state == BlockState.PREEMPTED
+    assert ctl.registry.get(eval_srv).state == BlockState.RUNNING
+    ctl.expire(hi)                                   # 4 free again
+    assert ctl.registry.get(trainer).state == BlockState.RUNNING
+    ctl.partitioner.check_invariants()
+
+
 def test_policy_quota_defaults_uncapped():
     pol = SchedulingPolicy()
     assert pol.admission_blocked("anyone", 10 ** 6, 10 ** 6, 10.0 ** 12) \
