@@ -1,0 +1,175 @@
+"""Autostep engine benchmark: aggregate steps/s vs client-driven
+dispatch, and SSE event fan-out latency.
+
+Two questions decide whether daemon-side execution is a free win:
+
+* **throughput parity** — the same 4-block workload run (a) client-driven
+  (``run_steps`` loops, the pre-engine way) and (b) engine-driven (blocks
+  armed with ``until_steps``, the pump does everything).  The acceptance
+  bar is autostep within 10% of the client-driven aggregate steps/s: the
+  simulator's serial step chains bound both runs, so any bigger gap is
+  engine overhead (dispatch windows starving, pump latency).
+* **SSE fan-out latency** — with N concurrent Server-Sent-Events watchers
+  holding the cluster stream over real HTTP, how stale is the feed?
+  Measured publish -> observed-on-the-wire per watcher per marker event.
+
+Sim jobs keep XLA out of the loop.  Output follows the repo's benchmark
+CSV convention: name,us_per_call,derived.
+
+    PYTHONPATH=src python benchmarks/engine_throughput.py
+"""
+import json
+import os
+import statistics
+import sys
+import threading
+import time
+import urllib.request
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.core.block import BlockState
+from repro.core.daemon import ClusterDaemon
+from repro.core.runtime import SimJobSpec
+from repro.core.topology import Topology
+from repro.gateway import GatewayServer, ProfileStore, UserProfile
+
+N_BLOCKS = 4
+STEPS = 150
+STEP_S = 0.003
+WATCHERS = 8
+MARKERS = 20
+
+
+def build(background: bool) -> ClusterDaemon:
+    topo = Topology(n_pods=1, pod_x=4, pod_y=4)
+    dev = jax.devices()[0]
+    return ClusterDaemon(topo, devices=[dev] * topo.n_chips,
+                         ckpt_root="artifacts/engine_bench_ckpt",
+                         background=background, tick_interval_s=0.01)
+
+
+def submit_blocks(daemon):
+    apps = []
+    for i in range(N_BLOCKS):
+        app, grant = daemon.submit(f"u{i}", f"bench {i}", 4,
+                                   job=SimJobSpec(step_s=STEP_S))
+        assert grant is not None
+        apps.append(app)
+    return apps
+
+
+def client_driven() -> float:
+    """The pre-engine way: a client loop POSTing steps (here: direct
+    ``run_steps`` calls — no HTTP, so this is the *generous* baseline)."""
+    daemon = build(background=False)
+    apps = submit_blocks(daemon)
+    t0 = time.perf_counter()
+    daemon.run_steps({a: STEPS for a in apps})
+    wall = time.perf_counter() - t0
+    for a in apps:
+        assert daemon.runtime(a).step_count == STEPS
+        daemon.expire(a)
+    return N_BLOCKS * STEPS / wall
+
+
+def engine_driven() -> float:
+    """Blocks armed at submission; the pump thread does all stepping."""
+    daemon = build(background=True)
+    apps = submit_blocks(daemon)
+    t0 = time.perf_counter()
+    for a in apps:
+        daemon.autostep_enable(a, until_steps=STEPS)
+    while not all(daemon.registry.get(a).state == BlockState.DONE
+                  for a in apps):
+        time.sleep(0.002)
+        assert time.perf_counter() - t0 < 60, "engine run stalled"
+    wall = time.perf_counter() - t0
+    for a in apps:
+        assert daemon.runtime(a).step_count == STEPS
+    daemon.stop()
+    return N_BLOCKS * STEPS / wall
+
+
+def sse_fanout():
+    """p50/max publish->observe latency across WATCHERS concurrent SSE
+    clients on the cluster-wide stream."""
+    daemon = build(background=True)
+    profiles = ProfileStore([UserProfile("root", "tok-admin", admin=True)])
+    server = GatewayServer(daemon, profiles).start()
+    observed = {}        # (marker, watcher) -> t_observed
+    ready = threading.Barrier(WATCHERS + 1)
+
+    def watch(idx):
+        url = (f"{server.url}/v1/events/stream?after=0&kinds=bench"
+               f"&max_s=30&access_token=tok-admin")
+        resp = urllib.request.urlopen(url, timeout=40)
+        ready.wait()
+        got = 0
+        for raw in resp:
+            line = raw.decode().rstrip("\n")
+            if not line.startswith("data: "):
+                continue
+            ev = json.loads(line[len("data: "):])
+            observed[(ev["marker"], idx)] = time.perf_counter()
+            got += 1
+            if got >= MARKERS:
+                resp.close()
+                return
+
+    threads = [threading.Thread(target=watch, args=(i,), daemon=True)
+               for i in range(WATCHERS)]
+    for t in threads:
+        t.start()
+    ready.wait()
+    time.sleep(0.2)                       # let every watcher park in wait()
+    sent = {}
+    for m in range(MARKERS):
+        sent[m] = time.perf_counter()
+        daemon.bus.publish("bench", app_id="bench", marker=m)
+        time.sleep(0.02)
+    deadline = time.monotonic() + 10.0
+    want = MARKERS * WATCHERS
+    while len(observed) < want and time.monotonic() < deadline:
+        time.sleep(0.01)
+    for t in threads:
+        t.join(2.0)
+    lats = [t_obs - sent[m] for (m, _i), t_obs in observed.items()]
+    server.stop()
+    daemon.stop()
+    p50 = statistics.median(lats) * 1e3 if lats else float("inf")
+    mx = max(lats) * 1e3 if lats else float("inf")
+    return p50, mx, len(observed), want
+
+
+def main() -> int:
+    client_sps = client_driven()
+    engine_sps = engine_driven()
+    ratio = engine_sps / client_sps
+    p50_ms, max_ms, seen, want = sse_fanout()
+
+    print("name,us_per_call,derived")
+    print(f"client_driven_steps_per_s,{1e6 / client_sps:.0f},"
+          f"{client_sps:.0f}")
+    print(f"autostep_steps_per_s,{1e6 / engine_sps:.0f},{engine_sps:.0f}")
+    print(f"autostep_vs_client_ratio,0,{ratio:.3f}")
+    print(f"sse_fanout_latency_p50_ms,0,{p50_ms:.2f}")
+    print(f"sse_fanout_latency_max_ms,0,{max_ms:.2f}")
+    print(f"sse_fanout_observed,0,{seen}/{want}")
+
+    ok = True
+    if ratio < 0.9:
+        print(f"WARNING: autostep steps/s {engine_sps:.0f} more than 10% "
+              f"below client-driven {client_sps:.0f}", file=sys.stderr)
+        ok = False
+    if seen < want:
+        print(f"WARNING: {want - seen} SSE deliveries unobserved",
+              file=sys.stderr)
+        ok = False
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

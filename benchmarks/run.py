@@ -8,6 +8,7 @@
   (scheduler) preemptive vs wait-for-expiry    -> benchmarks/preemption_latency.py
   (scheduler) policy vs FIFO admission         -> benchmarks/policy_admission.py
   (gateway)   web request rate + feed latency  -> benchmarks/gateway_throughput.py
+  (engine)    autostep vs client steps/s + SSE -> benchmarks/engine_throughput.py
 
 Prints ``name,us_per_call,derived`` CSV.  Subprocesses own the multi-device
 XLA flag so this process (and pytest) keep a single device.
@@ -112,6 +113,8 @@ SECTIONS = [
      "policy_admission.py", 1),
     ("gateway", "web gateway: request throughput + admit-to-event latency",
      "gateway_throughput.py", 1),
+    ("engine", "autostep engine: steps/s vs client-driven + SSE fan-out",
+     "engine_throughput.py", 1),
 ]
 
 

@@ -1,0 +1,160 @@
+"""Autostep engine + SSE + dashboard demo: the paper's daemon-owned job
+execution and "full control and monitoring over web", with zero client
+step traffic.
+
+    PYTHONPATH=src python examples/autostep_dashboard_demo.py
+
+A live ``ClusterDaemon`` (background pump) fronts a 16-chip pod through
+the HTTP gateway.  Three users submit simulator blocks with **autostep**
+enabled at submission — from that moment the daemon's engine drives every
+block to completion; this script never POSTs ``/steps``.  Meanwhile an
+admin watcher holds the cluster-wide **Server-Sent Events** stream open
+and sees every lifecycle transition and step land live, exactly what the
+browser dashboard at ``<gateway>/ui`` renders.  The demo asserts:
+
+  * all three blocks reach DONE purely through the engine (step counts
+    match each block's ``until_steps``, zero client step calls);
+  * the SSE stream shows the full lifecycle for every block
+    (approved -> confirmed -> active -> running -> done);
+  * the dashboard assets are served at ``/ui``.
+"""
+import json
+import os
+import sys
+import threading
+import urllib.error
+import urllib.request
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.core.daemon import ClusterDaemon
+from repro.core.topology import Topology
+from repro.gateway import GatewayServer, ProfileStore, UserProfile
+
+BASE = None
+STEP_CALLS = 0          # client /steps POSTs (the whole point: stays 0)
+TARGETS = {"alice": 60, "bob": 40, "carol": 30}
+
+
+def req(method, path, token=None, body=None, timeout=30):
+    global STEP_CALLS
+    if path.endswith("/steps"):
+        STEP_CALLS += 1
+    r = urllib.request.Request(BASE + path, method=method,
+                               data=(json.dumps(body).encode()
+                                     if body is not None else None))
+    if token:
+        r.add_header("Authorization", f"Bearer {token}")
+    try:
+        with urllib.request.urlopen(r, timeout=timeout) as resp:
+            return resp.status, json.loads(resp.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read())
+
+
+def main():
+    global BASE
+    topo = Topology(n_pods=1, pod_x=4, pod_y=4)          # 16 chips
+    dev = jax.devices()[0]
+    daemon = ClusterDaemon(topo, devices=[dev] * topo.n_chips,
+                           ckpt_root="artifacts/autostep_demo_ckpt",
+                           background=True, tick_interval_s=0.02)
+    profiles = ProfileStore([
+        UserProfile("alice", "tok-alice"),
+        UserProfile("bob", "tok-bob"),
+        UserProfile("carol", "tok-carol", priority=2, deadline_s=60.0),
+        UserProfile("root", "tok-admin", admin=True),
+    ])
+    server = GatewayServer(daemon, profiles).start()
+    BASE = server.url
+    print(f"== gateway serving {topo.n_chips}-chip pod at {BASE} ==")
+    print(f"== browser dashboard: {BASE}/ui ==")
+
+    with urllib.request.urlopen(BASE + "/ui", timeout=5) as r:
+        html = r.read().decode()
+    assert 'id="cluster-report"' in html and "/ui/app.js" in html
+    print("   dashboard served: cluster report + live feed markup OK")
+
+    # ------------------------- admin SSE watcher (the dashboard's feed)
+    events = []
+    done_users = set()
+    all_done = threading.Event()
+
+    def watch():
+        url = (f"{BASE}/v1/events/stream?after=0&max_s=60"
+               f"&access_token=tok-admin")
+        with urllib.request.urlopen(url, timeout=90) as resp:
+            for raw in resp:
+                line = raw.decode().rstrip("\n")
+                if not line.startswith("data: "):
+                    continue
+                ev = json.loads(line[len("data: "):])
+                events.append(ev)
+                if ev["kind"] == "state" and ev.get("state") == "done":
+                    done_users.add(ev["user"])
+                    if done_users >= set(TARGETS):
+                        all_done.set()
+                        return
+
+    watcher = threading.Thread(target=watch, daemon=True)
+    watcher.start()
+
+    # --------------- three users submit; the ENGINE does all the stepping
+    print("== 3 users submit with autostep enabled (no client steps) ==")
+    apps = {}
+    chips = {"alice": 8, "bob": 4, "carol": 4}
+    for user, steps in TARGETS.items():
+        s, r = req("POST", "/v1/submit", f"tok-{user}", {
+            "job_description": f"{user}'s autostepped job",
+            "n_chips": chips[user],
+            "job": {"kind": "sim", "step_s": 0.002, "ckpt_every": 10},
+            "autostep": {"until_steps": steps}})
+        assert s == 201 and r["admitted"], r
+        assert r["autostep"] and r["autostep"]["enabled"]
+        apps[user] = r["app_id"]
+        print(f"   {user}: {r['app_id']} admitted, engine armed "
+              f"(until_steps={steps})")
+
+    assert all_done.wait(30.0), (
+        f"engine did not finish all blocks; done={done_users}")
+    watcher.join(5.0)
+
+    print("== every block ran to completion daemon-side ==")
+    for user, app in apps.items():
+        s, st = req("GET", f"/v1/blocks/{app}", f"tok-{user}")
+        assert st["state"] == "done" and st["steps"] == TARGETS[user], st
+        print(f"   {user}: state={st['state']} steps={st['steps']}"
+              f"/{TARGETS[user]}")
+    assert STEP_CALLS == 0, f"client made {STEP_CALLS} /steps calls"
+    print(f"   client POST /steps calls: {STEP_CALLS} (engine-driven)")
+
+    print("== SSE stream saw the whole lifecycle, live ==")
+    by_app = {}
+    for ev in events:
+        if ev["kind"] == "state" and ev.get("app_id"):
+            by_app.setdefault(ev["app_id"], []).append(ev["state"])
+    for user, app in apps.items():
+        states = by_app.get(app, [])
+        assert states == ["approved", "confirmed", "active", "running",
+                          "done"], (user, states)
+        print(f"   {user}: {' -> '.join(states)}")
+    n_steps = sum(1 for ev in events if ev["kind"] == "step")
+    print(f"   ({len(events)} SSE frames observed, {n_steps} step events)")
+
+    for user, app in apps.items():
+        s, dl = req("GET", f"/v1/blocks/{app}/download", f"tok-{user}")
+        assert dl["steps"] == TARGETS[user]
+        req("POST", f"/v1/blocks/{app}/expire", f"tok-{user}", {})
+    s, rep = req("GET", "/v1/cluster", "tok-admin")
+    print(f"== final: {rep['free_chips']}/{rep['n_chips']} chips free, "
+          f"utilization_now={rep['queue']['utilization_now']:.0%} ==")
+    server.stop()
+    daemon.stop()
+    print("AUTOSTEP_DASHBOARD_DEMO_OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

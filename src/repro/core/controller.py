@@ -72,6 +72,10 @@ class ClusterController:
         self.runtimes: Dict[str, BlockRuntime] = {}   # app_id -> runtime
         self.ckpt_root = ckpt_root
         self.scheduler = BlockScheduler(self)
+        # installed by the ClusterDaemon: the autostep engine, consulted so
+        # a preemption harvests (publishes) an engine-driven victim's
+        # in-flight completions instead of silently discarding them
+        self.engine = None
 
     # -------------------------------------------------- device mapping
     def devices_for(self, coords: Sequence[Coord]) -> List:
@@ -287,6 +291,11 @@ class ClusterController:
                 f"cannot preempt {app_id} in state {blk.state.value}")
         assert blk.grant is not None, f"{app_id} holds no grant"
         rt = self.runtimes.get(app_id)
+        if self.engine is not None:
+            # engine-driven victims: publish the in-flight completions as
+            # step events before the suspend discards them (the drive
+            # stays armed and re-arms itself when the block resumes)
+            self.engine.drain_block(app_id, now=now)
         # progress measured *before* the suspend-save: what a non-graceful
         # kill would have lost, and what victim selection minimized
         progress_lost = int(getattr(rt, "progress_lost", 0) or 0)
@@ -351,11 +360,10 @@ class ClusterController:
         expired = self.registry.expired(now)
         for app_id in expired:
             self.expire(app_id, now=now)
-        self.scheduler.pump(now)
-        self.bus.publish(
-            "utilization", now=now,
-            used_chips=self.topo.n_chips - self.partitioner.free_capacity(),
-            total_chips=self.topo.n_chips)
+        # sample_util: the pump publishes the utilization sample from the
+        # held-chips snapshot it already computes per round — no second
+        # inventory scan here (one sample per tick, as before)
+        self.scheduler.pump(now, sample_util=True)
         return expired
 
     # ------------------------------------------------ concurrent execution

@@ -35,11 +35,13 @@ import dataclasses
 import queue
 import threading
 import time
+import traceback
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.controller import ClusterController
 from repro.core.events import BlockEvent, EventBus
 from repro.core.topology import Topology
+from repro.engine import AutostepEngine, PacingPolicy
 
 
 @dataclasses.dataclass
@@ -64,16 +66,27 @@ class ClusterDaemon:
         "activate", "run", "run_steps", "step_all", "download", "expire",
         "preempt", "resume", "resize", "tick", "inject_chip_failure",
         "save", "restore", "set_quota",
+        "autostep_enable", "autostep_disable", "autostep_pace",
+        "autostep_round",
     )
 
     def __init__(self, topo: Topology, devices: Optional[Sequence] = None,
                  ckpt_root: str = "artifacts/ckpt",
                  state_path: Optional[str] = None,
                  background: bool = False,
-                 tick_interval_s: float = 0.05):
+                 tick_interval_s: float = 0.05,
+                 autostep_interval_s: float = 0.001,
+                 pacing: Optional[PacingPolicy] = None):
         self.ctl = ClusterController(topo, devices=devices,
                                      ckpt_root=ckpt_root,
                                      state_path=state_path)
+        # the autostep engine drives RUNNING blocks from the pump thread
+        # (or inline via autostep_round); the controller drains a victim's
+        # in-flight window through it before a preemption suspend
+        self.engine = AutostepEngine(self.ctl, policy=pacing)
+        self.ctl.engine = self.engine
+        self.autostep_interval_s = autostep_interval_s
+        self._engine_error_logged = False   # first engine error traceback
         self._serial = threading.RLock()      # inline-mode serialization
         self._cmds: "queue.Queue[Command]" = queue.Queue()
         self._stop = threading.Event()
@@ -100,6 +113,10 @@ class ClusterDaemon:
             "save": self._save,
             "restore": self._restore,
             "set_quota": ctl.scheduler.policy.set_quota,
+            "autostep_enable": self.engine.enable,
+            "autostep_disable": self.engine.disable,
+            "autostep_pace": self.engine.set_pace,
+            "autostep_round": self.engine.run_round,
         }
         if background:
             self.start()
@@ -143,8 +160,26 @@ class ClusterDaemon:
     def _pump_loop(self) -> None:
         last_tick = time.monotonic()
         while not self._stop.is_set():
+            idle = self.tick_interval_s
+            if self.engine.armed:
+                # engine-driven blocks progress between commands; while
+                # work is flowing (or in flight) the pump spins at the
+                # autostep cadence instead of the tick interval
+                with self._serial:
+                    try:
+                        self.engine.run_round()
+                    except Exception:
+                        # an engine bug must not kill the service loop —
+                        # but it must not busy-spin on a stale busy flag
+                        # or fail silently either
+                        self.engine.last_round_busy = False
+                        if not self._engine_error_logged:
+                            self._engine_error_logged = True
+                            traceback.print_exc()
+                if self.engine.last_round_busy:
+                    idle = self.autostep_interval_s
             try:
-                cmd = self._cmds.get(timeout=self.tick_interval_s)
+                cmd = self._cmds.get(timeout=idle)
             except queue.Empty:
                 cmd = None
             if cmd is not None:
@@ -274,6 +309,25 @@ class ClusterDaemon:
         return self.call("set_quota", user, max_chips=max_chips,
                          max_chip_seconds=max_chip_seconds)
 
+    def autostep_enable(self, app_id: str, **cfg) -> Dict:
+        """Arm the autostep engine for one block (daemon-side stepping:
+        the pump drives the block's dispatch window; no client ``steps``
+        traffic needed).  ``cfg``: max_rate_hz, until_steps, until_t,
+        stop_at_deadline, ckpt_every."""
+        return self.call("autostep_enable", app_id, **cfg)
+
+    def autostep_disable(self, app_id: str, reason: str = "disabled"):
+        return self.call("autostep_disable", app_id, reason=reason)
+
+    def autostep_pace(self, app_id: str, max_rate_hz: Optional[float]):
+        return self.call("autostep_pace", app_id, max_rate_hz)
+
+    def autostep_round(self, now: Optional[float] = None,
+                       budget: Optional[int] = None) -> int:
+        """Drive one engine round inline (deterministic mode / tests;
+        background mode runs rounds from the pump thread automatically)."""
+        return self.call("autostep_round", now=now, budget=budget)
+
     # ------------------------------------------------------------ reads
     # (thread-safe structures; never queued behind commands)
     @property
@@ -332,6 +386,7 @@ class ClusterDaemon:
             "preempt_count": blk.preempt_count,
             "failure": blk.failure_reason,
             "steps": getattr(rt, "step_count", 0) if rt else 0,
+            "autostep": self.engine.describe(app_id),
         }
 
     def list_apps(self, user: Optional[str] = None) -> List[Dict]:

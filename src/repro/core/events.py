@@ -49,7 +49,9 @@ KINDS = frozenset({
                     #   checkpoint_step)
     "resumed",      # rebuilt on a fresh grant after preemption
     "step",         # one completed runtime step (payload: step_s, n_chips)
-    "utilization",  # periodic pod usage sample from tick()
+    "utilization",  # periodic pod usage sample from the scheduler pump
+    "autostep",     # engine opt-in lifecycle (payload: action = enabled |
+                    #   disabled | paced | done, plus the drive config)
 })
 
 
@@ -84,12 +86,25 @@ class EventBus:
     queue guarantees.
     """
 
-    def __init__(self, history: int = 8192):
+    def __init__(self, history: int = 8192, per_block_history: int = 1024,
+                 max_app_rings: int = 4096):
         # RLock: wait() re-enters events_since while holding the condition
         self._lock = threading.RLock()
         self._cond = threading.Condition(self._lock)
         self._seq = 0
         self._history: Deque[BlockEvent] = collections.deque(maxlen=history)
+        # per-block rings behind the global ring: one hot block's step
+        # storm (autostep engine) evicts only its *own* replay history —
+        # another block's per-app feed stays complete even when the global
+        # ring has long since wrapped past its events
+        self._per_block_history = per_block_history
+        self._per_app: Dict[str, Deque[BlockEvent]] = {}
+        # per-app rings are created lazily and never die with the block
+        # (a DONE/EXPIRED block's feed is still replayable) — so bound
+        # their *count*: past the cap the least-recently-active quarter
+        # is dropped (long-quiet blocks; the global ring still covers
+        # anything recent)
+        self._max_app_rings = max_app_rings
         self._subs: List[tuple] = []   # (callback, kinds-or-None)
 
     # ------------------------------------------------------------- publish
@@ -106,6 +121,18 @@ class EventBus:
                             kind=kind, app_id=app_id, block_id=block_id,
                             user=user, payload=payload)
             self._history.append(ev)
+            if app_id is not None:
+                ring = self._per_app.get(app_id)
+                if ring is None:
+                    if len(self._per_app) >= self._max_app_rings:
+                        stale = sorted(self._per_app,
+                                       key=lambda a:
+                                       self._per_app[a][-1].seq)
+                        for a in stale[:max(1, len(stale) // 4)]:
+                            del self._per_app[a]
+                    ring = self._per_app[app_id] = collections.deque(
+                        maxlen=self._per_block_history)
+                ring.append(ev)
             subs = list(self._subs)
             self._cond.notify_all()
         for fn, kinds in subs:
@@ -140,11 +167,15 @@ class EventBus:
         application and/or a kind set.  Events older than the ring buffer
         are gone — clients that fall that far behind simply resume from
         what remains (the registry snapshot is the source of truth for
-        *current* state)."""
+        *current* state).  Per-application queries read the block's own
+        ring, so a busy neighbour cannot have evicted their events."""
         with self._lock:
-            out = [ev for ev in self._history
+            if app_id is not None:
+                source = self._per_app.get(app_id, ())
+            else:
+                source = self._history
+            out = [ev for ev in source
                    if ev.seq > after_seq
-                   and (app_id is None or ev.app_id == app_id)
                    and (kinds is None or ev.kind in kinds)]
         return out[:limit]
 

@@ -34,6 +34,30 @@ class Registry:
         self.state_path = state_path
         self.bus = bus           # EventBus: every transition becomes a
                                  # kind="state" event for the live feed
+        # gateway session state (profiles + event-feed cursors), persisted
+        # inside the registry snapshot under the reserved "_sessions" key
+        # so a restarted gateway rehydrates the paper's per-user
+        # configuration instead of forgetting every session
+        self._sessions: Dict = {}
+        if state_path and os.path.exists(state_path):
+            try:
+                with open(state_path) as f:
+                    self._sessions = json.load(f).get("_sessions", {}) or {}
+            except (OSError, ValueError):
+                pass     # a corrupt snapshot must not block daemon boot
+
+    # ------------------------------------------------------------- sessions
+    def session_snapshot(self) -> Dict:
+        """Deep copy of the stored gateway session state."""
+        with self._lock:
+            return json.loads(json.dumps(self._sessions, default=str))
+
+    def store_sessions(self, sessions: Dict) -> None:
+        """Replace the gateway session state and persist it with the next
+        registry snapshot write."""
+        with self._lock:
+            self._sessions = dict(sessions)
+            self._persist()
 
     def _emit(self, app_id: str, note: str = "",
               now: Optional[float] = None) -> None:
@@ -180,7 +204,8 @@ class Registry:
     def _persist(self) -> None:
         if not self.state_path:
             return
-        snap = {}
+        # "_sessions" cannot collide with app ids (always "app_NNNN")
+        snap: Dict = {"_sessions": self._sessions} if self._sessions else {}
         for app_id, blk in self.apps.items():
             snap[app_id] = {
                 "user": blk.request.user,

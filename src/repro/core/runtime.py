@@ -53,6 +53,10 @@ class JobSpec:
     ckpt_namespace: Optional[str] = None  # stable checkpoint namespace so a
                                           # relaunched driver can --resume;
                                           # default: the (random) block id
+    ckpt_every: int = 0              # periodic checkpoint interval under
+                                     # daemon-side autostep (client-driven
+                                     # drivers call save() between batches
+                                     # themselves; the engine reads this)
 
 
 @dataclasses.dataclass

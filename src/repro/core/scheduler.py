@@ -527,13 +527,21 @@ class BlockScheduler:
                 self.ctl.registry.deny(
                     app_id, f"gang {entry.gang_id} member withdrawn")
 
-    def pump(self, now: Optional[float] = None) -> List[str]:
+    def pump(self, now: Optional[float] = None,
+             sample_util: bool = False) -> List[str]:
         """Admit waitlisted admission units that now fit, in fair-share +
         deadline-slack order (with backfill past units that don't fit or
         are quota-blocked).  When nothing fits and preemption is enabled,
         evict the cheapest sufficient set of strictly-lower-priority
         running blocks per round to make room for the best-ranked unit.
-        Called from ``tick()`` and after every expiry/shrink."""
+        Called from ``tick()`` and after every expiry/shrink.
+
+        ``sample_util=True`` (the tick path) additionally publishes one
+        pod-utilization event computed from the held-chips snapshot the
+        admission loop already builds — the Monitor's utilization sampling
+        rides the pump's own bookkeeping instead of a second inventory
+        scan per tick (which matters once the autostep engine has the
+        pump looping at step cadence)."""
         admitted: List[str] = []
         # `now or time.time()` would swap wall clock in for model-time 0.0
         # and corrupt wait accounting under a simulated clock
@@ -569,7 +577,15 @@ class BlockScheduler:
             if not progress and self.preemption_enabled:
                 progress = self._preempt_for_waiters(now, held, used)
             if not progress:
-                return admitted
+                break
+        if sample_util:
+            # final-iteration `held` is current (that iteration admitted
+            # nothing); its sum is exactly the chips blocks hold right now
+            self.ctl.bus.publish(
+                "utilization", now=now,
+                used_chips=sum(held.values()),
+                total_chips=self.ctl.topo.n_chips)
+        return admitted
 
     # ----------------------------------------------------------- preemption
     def _preempt_for_waiters(self, now: Optional[float] = None,

@@ -30,8 +30,16 @@ def bearer_token(headers: Mapping[str, str]) -> Optional[str]:
 
 
 def require_user(headers: Mapping[str, str],
-                 store: ProfileStore) -> UserProfile:
-    profile = store.authenticate(bearer_token(headers))
+                 store: ProfileStore,
+                 query: Optional[Mapping[str, str]] = None) -> UserProfile:
+    """Resolve the session.  The bearer header is canonical; an
+    ``access_token`` query parameter is accepted too because the browser
+    ``EventSource`` API (the dashboard's SSE client) cannot set request
+    headers."""
+    token = bearer_token(headers)
+    if token is None and query is not None:
+        token = query.get("access_token")
+    profile = store.authenticate(token)
     if profile is None:
         raise AuthError(401, "missing or unknown bearer token")
     return profile

@@ -10,8 +10,12 @@ Routes (all JSON in/out, ``Authorization: Bearer <session token>``):
   ``POST /v1/blocks/<id>/activate``  step (4): boot the runtime (job spec)
   ``POST /v1/blocks/<id>/run``       step (5): start the job
   ``POST /v1/blocks/<id>/steps``     drive N steps (event-driven dispatch)
+  ``POST /v1/blocks/<id>/autostep``  daemon-side stepping: enable/disable/
+                                     pace the autostep engine for the block
   ``GET  /v1/blocks/<id>``           step (6): monitor one block
   ``GET  /v1/blocks/<id>/events``    step (6): long-poll live event feed
+  ``GET  /v1/blocks/<id>/events/stream``  the same feed as Server-Sent
+                                     Events (``text/event-stream``)
   ``GET  /v1/blocks/<id>/download``  step (7): collect results
   ``POST /v1/blocks/<id>/preempt``   admin: evict (checkpoint + release)
   ``POST /v1/blocks/<id>/resume``    admin: re-admit a preempted block
@@ -20,18 +24,32 @@ Routes (all JSON in/out, ``Authorization: Bearer <session token>``):
   ``GET  /v1/blocks``                my blocks (admin: everyone's)
   ``GET  /v1/cluster``               pod inventory + monitor reports
   ``GET  /v1/events``                admin: global event feed (long-poll)
+  ``GET  /v1/events/stream``         admin: cluster-wide SSE stream
   ``GET  /v1/profile``               who am I / my session configuration
+  ``GET  /v1/profile/cursors``       my persisted event-feed cursors
+  ``GET  /ui`` (+ ``/ui/<asset>``)   the browser dashboard (static, no auth
+                                     for the assets — data calls need a
+                                     session token)
 
 Request defaults (priority, deadline, duration) come from the caller's
 session profile when a submission omits them — the paper's per-user
 configuration files.  Job specs are dicts: ``{"kind": "sim", "step_s":
 0.01}`` boots the device-free simulator; ``{"kind": "train"|"serve",
 "arch": "xlstm_350m", ...}`` builds a real ``JobSpec``.
+
+Feed cursors: every served feed page (long-poll or SSE) records the
+session's ``next_after`` in the registry-backed session store, and a feed
+request may pass ``after=resume`` to continue from the stored cursor —
+so a gateway restart (or a browser reopening the dashboard) picks up
+where the session left off instead of replaying or skipping events.
 """
 from __future__ import annotations
 
 import json
+import os
 import re
+import threading
+import time
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.partition import AllocationError
@@ -39,8 +57,17 @@ from repro.core.runtime import JobSpec, SimJobSpec
 from repro.gateway import auth
 from repro.gateway.auth import AuthError
 from repro.gateway.profiles import ProfileStore, UserProfile
+from repro.gateway.ratelimit import RateLimiter
 
 MAX_LONGPOLL_S = 30.0
+MAX_SSE_S = 3600.0          # hard per-connection cap on an SSE stream
+SSE_HEARTBEAT_S = 10.0      # comment frame cadence (detects dead clients)
+STATIC_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "static")
+_CTYPES = {".html": "text/html; charset=utf-8",
+           ".js": "text/javascript; charset=utf-8",
+           ".css": "text/css; charset=utf-8",
+           ".svg": "image/svg+xml"}
 
 
 class ApiError(Exception):
@@ -97,6 +124,73 @@ def _grant_dict(grant) -> Optional[Dict]:
             "expires_at": grant.expires_at}
 
 
+class StaticFile:
+    """A non-JSON response body (the dashboard's assets).  The HTTP server
+    recognizes this return type and writes the bytes verbatim."""
+
+    def __init__(self, data: bytes, content_type: str):
+        self.data = data
+        self.content_type = content_type
+
+
+class SSEStream:
+    """A Server-Sent Events response: the HTTP server hands ``serve`` the
+    socket and the stream pushes every matching bus event as one
+    ``id:``/``event:``/``data:`` frame until the client disconnects, the
+    gateway shuts down, or ``max_s`` elapses.  ``id`` is the bus cursor,
+    so a reconnecting ``EventSource`` resumes exactly where it dropped
+    (the browser re-sends it as ``Last-Event-ID``)."""
+
+    def __init__(self, daemon, after: int, app_id: Optional[str] = None,
+                 kinds=None, max_s: float = MAX_SSE_S,
+                 heartbeat_s: float = SSE_HEARTBEAT_S,
+                 closing: Optional[threading.Event] = None,
+                 on_cursor=None):
+        self.daemon = daemon
+        self.after = after
+        self.app_id = app_id
+        self.kinds = kinds
+        self.max_s = max_s
+        self.heartbeat_s = heartbeat_s
+        self.closing = closing or threading.Event()
+        self.on_cursor = on_cursor          # cursor persistence callback
+
+    def serve(self, wfile) -> None:
+        end = time.monotonic() + self.max_s
+        next_beat = time.monotonic() + self.heartbeat_s
+        after = self.after
+        try:
+            # an immediate comment flushes headers so EventSource fires
+            # its `open` event before the first real event arrives
+            wfile.write(b": stream open\n\n")
+            wfile.flush()
+            while not self.closing.is_set():
+                remaining = end - time.monotonic()
+                if remaining <= 0:
+                    return
+                # short waits keep shutdown + heartbeat latency bounded
+                evs = self.daemon.wait_events(
+                    after, app_id=self.app_id, kinds=self.kinds,
+                    timeout=min(1.0, remaining), limit=500)
+                if evs:
+                    chunks = []
+                    for ev in evs:
+                        data = json.dumps(ev.to_dict(), default=str)
+                        chunks.append(f"id: {ev.seq}\nevent: {ev.kind}\n"
+                                      f"data: {data}\n\n")
+                    wfile.write("".join(chunks).encode())
+                    wfile.flush()
+                    after = evs[-1].seq
+                    if self.on_cursor is not None:
+                        self.on_cursor(after)
+                elif time.monotonic() >= next_beat:
+                    wfile.write(b": keep-alive\n\n")
+                    wfile.flush()
+                    next_beat = time.monotonic() + self.heartbeat_s
+        except (BrokenPipeError, ConnectionResetError, OSError):
+            return      # client went away: normal end of stream
+
+
 class GatewayApi:
     """Routes HTTP requests onto the ClusterDaemon's typed command API.
 
@@ -109,6 +203,7 @@ class GatewayApi:
         (m, re.compile(p), fn) for m, p, fn in [
             ("GET", r"^/v1/ping$", "ping"),
             ("GET", r"^/v1/profile$", "profile"),
+            ("GET", r"^/v1/profile/cursors$", "profile_cursors"),
             ("GET", r"^/v1/cluster$", "cluster"),
             ("POST", r"^/v1/register$", "register"),
             ("POST", r"^/v1/submit$", "submit"),
@@ -117,6 +212,8 @@ class GatewayApi:
             ("GET", r"^/v1/blocks/(?P<app_id>[\w-]+)$", "block_status"),
             ("GET", r"^/v1/blocks/(?P<app_id>[\w-]+)/events$",
              "block_events"),
+            ("GET", r"^/v1/blocks/(?P<app_id>[\w-]+)/events/stream$",
+             "block_events_stream"),
             ("GET", r"^/v1/blocks/(?P<app_id>[\w-]+)/download$",
              "download"),
             ("POST", r"^/v1/blocks/(?P<app_id>[\w-]+)/review$", "review"),
@@ -126,20 +223,123 @@ class GatewayApi:
              "activate"),
             ("POST", r"^/v1/blocks/(?P<app_id>[\w-]+)/run$", "run"),
             ("POST", r"^/v1/blocks/(?P<app_id>[\w-]+)/steps$", "steps"),
+            ("POST", r"^/v1/blocks/(?P<app_id>[\w-]+)/autostep$",
+             "autostep"),
             ("POST", r"^/v1/blocks/(?P<app_id>[\w-]+)/preempt$",
              "preempt"),
             ("POST", r"^/v1/blocks/(?P<app_id>[\w-]+)/resume$", "resume"),
             ("POST", r"^/v1/blocks/(?P<app_id>[\w-]+)/resize$", "resize"),
             ("POST", r"^/v1/blocks/(?P<app_id>[\w-]+)/expire$", "expire"),
             ("GET", r"^/v1/events$", "global_events"),
+            ("GET", r"^/v1/events/stream$", "global_events_stream"),
+            ("GET", r"^/ui/?$", "ui_index"),
+            ("GET", r"^/ui/(?P<asset>[\w][\w.\-]*)$", "ui_asset"),
         ]
     ]
 
-    def __init__(self, daemon, profiles: ProfileStore):
+    #: routes served without a session (liveness probe + dashboard assets
+    #: — the dashboard's *data* calls all authenticate normally)
+    NO_AUTH = frozenset({"ping", "ui_index", "ui_asset"})
+
+    #: the only routes that accept ?access_token= (EventSource cannot set
+    #: headers); everywhere else the token must ride the Authorization
+    #: header so it never lands in URLs/access logs
+    QUERY_TOKEN_OK = frozenset({"block_events_stream",
+                                "global_events_stream"})
+
+    #: minimum interval between full session-snapshot writes: cursor
+    #: updates ride the event hot path, and every store is a whole
+    #: registry persist (fsync) — throttle, and flush on close
+    SESSION_FLUSH_S = 1.0
+
+    def __init__(self, daemon, profiles: ProfileStore,
+                 rate_limiter: Optional[RateLimiter] = None,
+                 static_dir: str = STATIC_DIR):
         self.daemon = daemon
         self.profiles = profiles
+        self.rate_limiter = rate_limiter
+        self.static_dir = static_dir
+        #: set by the server on shutdown so parked SSE streams drain fast
+        self.closing = threading.Event()
+        # registry-backed session persistence: a rebuilt gateway over the
+        # same daemon (or a daemon rebooted from its state snapshot)
+        # rehydrates stored profiles and event-feed cursors, so sessions
+        # survive the restart instead of every token going dark
+        self._cursor_lock = threading.Lock()
+        # serializes snapshot+store pairs: without it two persists could
+        # commit out of order and leave the older snapshot on disk
+        self._persist_lock = threading.Lock()
+        self._sessions_dirty = False
+        self._last_session_flush = float("-inf")
+        stored = daemon.registry.session_snapshot()
+        profiles.rehydrate(stored.get("profiles", ()))
+        self._cursors: Dict[str, Dict[str, int]] = {
+            t: dict(c) for t, c in (stored.get("cursors") or {}).items()}
         # the paper's per-user configuration becomes live policy
         profiles.apply_quotas(daemon.scheduler.policy)
+        self._persist_sessions(force=True)
+
+    # ------------------------------------------------------- rate limiting
+    def _rate_limited(self, key: Optional[str]) -> Optional[Tuple[int,
+                                                                  Dict]]:
+        """Spend one token for ``key`` (None = the shared anonymous
+        bucket).  Returns the 429 response when exhausted, else None."""
+        if self.rate_limiter is None:
+            return None
+        ok, retry = self.rate_limiter.allow(key)
+        if ok:
+            return None
+        who = "this session" if key else "unauthenticated requests"
+        return 429, {"error": f"rate limit exceeded for {who}",
+                     "retry_after_s": round(retry, 3)}
+
+    # ----------------------------------------------------- session storage
+    def _persist_sessions(self, force: bool = False) -> None:
+        """Store the session state in the registry.  The snapshot handed
+        over is a deep copy taken under the cursor lock — the registry
+        json-serializes it later under its *own* lock, and a live
+        reference would race concurrent cursor inserts.  Writes are
+        throttled (every store is a full registry persist + fsync);
+        ``flush_sessions`` forces the final one."""
+        now = time.monotonic()
+        with self._persist_lock:
+            with self._cursor_lock:
+                if not force and now - self._last_session_flush < \
+                        self.SESSION_FLUSH_S:
+                    self._sessions_dirty = True
+                    return
+                snap = {t: dict(c) for t, c in self._cursors.items()}
+                self._sessions_dirty = False
+                self._last_session_flush = now
+            self.daemon.registry.store_sessions(
+                {"profiles": self.profiles.snapshot(), "cursors": snap})
+
+    def flush_sessions(self) -> None:
+        """Write any throttled session state now (gateway shutdown)."""
+        with self._cursor_lock:
+            dirty = self._sessions_dirty
+        if dirty:
+            self._persist_sessions(force=True)
+
+    def _remember_cursor(self, token: str, feed: str, after: int) -> None:
+        with self._cursor_lock:
+            cur = self._cursors.setdefault(token, {})
+            if cur.get(feed) == after:
+                return
+            cur[feed] = after
+        self._persist_sessions()
+
+    def _resolve_after(self, profile: UserProfile, feed: str,
+                       query: Dict[str, str]) -> int:
+        raw = query.get("after", "0")
+        if raw == "resume":
+            with self._cursor_lock:
+                return int(self._cursors.get(profile.token, {})
+                           .get(feed, 0))
+        try:
+            return int(raw)
+        except ValueError:
+            raise ApiError(400, f"bad cursor {raw!r}")
 
     # --------------------------------------------------------------- router
     def handle(self, method: str, path: str, query: Dict[str, str],
@@ -158,7 +358,36 @@ class GatewayApi:
             try:
                 if name == "ping":           # liveness probe: no auth
                     return 200, {"ok": True}
-                profile = auth.require_user(headers, self.profiles)
+                if name in self.NO_AUTH:
+                    # unauthenticated surfaces share the anonymous bucket
+                    # — an asset flood is throttled like any other
+                    hit = self._rate_limited(None)
+                    if hit is not None:
+                        return hit
+                    return getattr(self, name)(None, match.groupdict(),
+                                               payload, query)
+                # browsers resume an SSE stream with Last-Event-ID; fold
+                # it into the cursor query the feed handlers already read
+                last_id = (headers.get("Last-Event-ID")
+                           or headers.get("last-event-id"))
+                if last_id and "after" not in query:
+                    query = dict(query, after=last_id)
+                try:
+                    profile = auth.require_user(
+                        headers, self.profiles,
+                        query=(query if name in self.QUERY_TOKEN_OK
+                               else None))
+                except AuthError:
+                    # a bad-token spray shares ONE anonymous bucket (a
+                    # flood of invented tokens can neither fill the
+                    # bucket table nor dodge the limiter via 401s)
+                    hit = self._rate_limited(None)
+                    if hit is not None:
+                        return hit
+                    raise
+                hit = self._rate_limited(profile.token)
+                if hit is not None:
+                    return hit
                 return getattr(self, name)(profile, match.groupdict(),
                                            payload, query)
             except (AuthError, ApiError) as e:
@@ -189,6 +418,13 @@ class GatewayApi:
     # ------------------------------------------------------------- handlers
     def profile(self, profile, path_args, body, query):
         return 200, {"profile": profile.public()}
+
+    def profile_cursors(self, profile, path_args, body, query):
+        """The session's persisted event-feed cursors (feed key -> last
+        served seq) — what ``after=resume`` continues from."""
+        with self._cursor_lock:
+            return 200, {"cursors":
+                         dict(self._cursors.get(profile.token, {}))}
 
     def cluster(self, profile, path_args, body, query):
         return 200, self.daemon.cluster_report()
@@ -232,12 +468,27 @@ class GatewayApi:
         if "n_chips" not in body:
             raise ApiError(400, "n_chips is required")
         kw = self._submission_kwargs(profile, body)
+        auto = body.get("autostep")
+        auto_kw = None
+        if isinstance(auto, dict) and auto.get("enabled", True):
+            # coerce *before* submitting: a malformed autostep field must
+            # fail this request outright, not 400 after the block was
+            # already admitted (an orphan holding chips under an app_id
+            # the caller never received)
+            auto_kw = self._autostep_kwargs(auto)
         app_id, grant = self.daemon.submit(
             profile.user, body.get("job_description", ""),
             int(body["n_chips"]), job=parse_job(body.get("job")), **kw)
+        st = self.daemon.status(app_id)
+        if auto_kw is not None and st["state"] not in ("denied", "expired"):
+            # arm the engine at submission: the block autosteps from the
+            # moment it is RUNNING (now, or whenever the pump admits it)
+            self.daemon.autostep_enable(app_id, **auto_kw)
+            st = self.daemon.status(app_id)
         return 201, {"app_id": app_id, "admitted": grant is not None,
                      "grant": _grant_dict(grant),
-                     "state": self.daemon.status(app_id)["state"]}
+                     "state": st["state"],
+                     "autostep": st["autostep"]}
 
     def submit_gang(self, profile, path_args, body, query):
         members = body.get("members")
@@ -309,6 +560,47 @@ class GatewayApi:
                      "records": recs[-10:],
                      "steps": self.daemon.status(app_id)["steps"]}
 
+    @staticmethod
+    def _autostep_kwargs(body: Dict) -> Dict:
+        """Coerce an autostep config object; raises a 400 ``ApiError``
+        without touching the daemon."""
+        try:
+            return dict(
+                max_rate_hz=(None if body.get("max_rate_hz") is None
+                             else float(body["max_rate_hz"])),
+                until_steps=(None if body.get("until_steps") is None
+                             else int(body["until_steps"])),
+                until_t=(None if body.get("until_t") is None
+                         else float(body["until_t"])),
+                stop_at_deadline=bool(body.get("stop_at_deadline", False)),
+                ckpt_every=int(body.get("ckpt_every", 0)))
+        except (TypeError, ValueError) as e:
+            raise ApiError(400, f"bad autostep field: {e}")
+
+    def autostep(self, profile, path_args, body, query):
+        """Daemon-side stepping controls: ``{"enabled": true, ...config}``
+        arms (or re-configures) the engine for the block, ``{"enabled":
+        false}`` disarms, ``{"max_rate_hz": X}`` alone re-paces a running
+        drive.  The owner controls their own block; admins any."""
+        app_id = path_args["app_id"]
+        self._owned_block(profile, app_id)
+        enabled = bool(body.get("enabled", True))
+        if not enabled:
+            self.daemon.autostep_disable(
+                app_id, reason=f"disabled by {profile.user}")
+            return 200, {"autostep": None}
+        kw = self._autostep_kwargs(body)         # 400 on malformed fields
+        if set(body) == {"max_rate_hz"}:
+            # a bare pace re-paces a *running* drive only — it must never
+            # silently arm a fresh unbounded drive on a disarmed block
+            if not self.daemon.engine.enabled(app_id):
+                raise ApiError(409, "autostep is not enabled for this "
+                                    "block; POST a full config to arm it")
+            cfg = self.daemon.autostep_pace(app_id, kw["max_rate_hz"])
+            return 200, {"autostep": cfg}
+        # a terminal-state block raises ValueError -> 409 via the router
+        return 200, {"autostep": self.daemon.autostep_enable(app_id, **kw)}
+
     def preempt(self, profile, path_args, body, query):
         auth.require_admin(profile)
         self.daemon.preempt(path_args["app_id"],
@@ -342,9 +634,10 @@ class GatewayApi:
         return 200, self.daemon.download(app_id)
 
     # ------------------------------------------------------------ event feed
-    def _feed(self, query: Dict[str, str],
+    def _feed(self, profile: UserProfile, query: Dict[str, str],
               app_id: Optional[str]) -> Tuple[int, Dict]:
-        after = int(query.get("after", 0))
+        feed_key = app_id or "*"
+        after = self._resolve_after(profile, feed_key, query)
         timeout = min(float(query.get("timeout_s", 0.0)), MAX_LONGPOLL_S)
         kinds = (set(query["kinds"].split(","))
                  if query.get("kinds") else None)
@@ -357,14 +650,59 @@ class GatewayApi:
         # no events -> cursor unchanged: advancing past unmatched seqs
         # could skip a matching event racing the poll
         next_after = evs[-1].seq if evs else after
+        if evs:
+            self._remember_cursor(profile.token, feed_key, next_after)
         return 200, {"events": [e.to_dict() for e in evs],
                      "next_after": next_after}
+
+    def _stream(self, profile: UserProfile, query: Dict[str, str],
+                app_id: Optional[str]) -> Tuple[int, SSEStream]:
+        feed_key = app_id or "*"
+        after = self._resolve_after(profile, feed_key, query)
+        kinds = (set(query["kinds"].split(","))
+                 if query.get("kinds") else None)
+        max_s = min(float(query.get("max_s", MAX_SSE_S)), MAX_SSE_S)
+        token = profile.token
+        return 200, SSEStream(
+            self.daemon, after, app_id=app_id, kinds=kinds, max_s=max_s,
+            closing=self.closing,
+            on_cursor=lambda seq: self._remember_cursor(token, feed_key,
+                                                        seq))
 
     def block_events(self, profile, path_args, body, query):
         app_id = path_args["app_id"]
         self._owned_block(profile, app_id)
-        return self._feed(query, app_id)
+        return self._feed(profile, query, app_id)
+
+    def block_events_stream(self, profile, path_args, body, query):
+        app_id = path_args["app_id"]
+        self._owned_block(profile, app_id)
+        return self._stream(profile, query, app_id)
 
     def global_events(self, profile, path_args, body, query):
         auth.require_admin(profile)
-        return self._feed(query, None)
+        return self._feed(profile, query, None)
+
+    def global_events_stream(self, profile, path_args, body, query):
+        auth.require_admin(profile)
+        return self._stream(profile, query, None)
+
+    # ------------------------------------------------------------ dashboard
+    def _static(self, name: str) -> Tuple[int, object]:
+        if "/" in name or ".." in name:
+            raise ApiError(404, "no such asset")
+        path = os.path.join(self.static_dir, name)
+        try:
+            with open(path, "rb") as f:
+                data = f.read()
+        except OSError:
+            raise ApiError(404, f"no such asset {name!r}")
+        ctype = _CTYPES.get(os.path.splitext(name)[1],
+                            "application/octet-stream")
+        return 200, StaticFile(data, ctype)
+
+    def ui_index(self, profile, path_args, body, query):
+        return self._static("index.html")
+
+    def ui_asset(self, profile, path_args, body, query):
+        return self._static(path_args["asset"])

@@ -73,6 +73,30 @@ class ProfileStore:
                 policy.set_quota(p.user, max_chips=p.max_chips,
                                  max_chip_seconds=p.max_chip_seconds)
 
+    # ------------------------------------------------------------ persistence
+    def snapshot(self) -> list:
+        """Full profile dump (tokens included) for the registry-backed
+        session store — what lets a restarted gateway keep authenticating
+        the same sessions."""
+        return [dataclasses.asdict(p) for p in self._by_user.values()]
+
+    def rehydrate(self, dicts: Iterable[Dict]) -> int:
+        """Re-add stored profiles that this store doesn't already define.
+        Profiles passed to the constructor win (an operator's fresh config
+        overrides the snapshot); unknown fields are dropped so older
+        snapshots keep loading after UserProfile grows."""
+        fields = {f.name for f in dataclasses.fields(UserProfile)}
+        n = 0
+        for d in dicts or ():
+            d = {k: v for k, v in dict(d).items() if k in fields}
+            if not d.get("user") or not d.get("token"):
+                continue
+            if d["user"] in self._by_user or d["token"] in self._by_token:
+                continue
+            self.add(UserProfile(**d))
+            n += 1
+        return n
+
     @classmethod
     def from_file(cls, path: str) -> "ProfileStore":
         """Load profiles from a JSON list of UserProfile field dicts."""

@@ -1,0 +1,222 @@
+/* Public Cluster dashboard — dependency-free browser client.
+ *
+ * Data flow: REST for snapshots (/v1/cluster, /v1/blocks), Server-Sent
+ * Events for liveness. Admin sessions hold one cluster-wide stream;
+ * plain users hold one stream per owned block (the gateway scopes the
+ * feed to what the session may see). Every data call carries the bearer
+ * token; EventSource cannot set headers, so streams pass it as
+ * ?access_token= (the gateway accepts both).
+ */
+"use strict";
+
+const $ = (id) => document.getElementById(id);
+let TOKEN = localStorage.getItem("pc_token") || "";
+let PROFILE = null;
+let sources = [];          // open EventSource objects
+let refreshTimer = null;   // debounce: many events -> one refresh
+
+// lifecycle state -> status tone (the badge also always shows the name)
+const TONES = {
+  running: "good", active: "good", done: "good",
+  queued: "warning", preempted: "warning",
+  requested: "accent", approved: "accent", confirmed: "accent",
+  expired: "serious",
+  failed: "critical", denied: "critical",
+};
+
+async function api(method, path, body) {
+  const res = await fetch(path, {
+    method,
+    headers: Object.assign(
+      { "Authorization": "Bearer " + TOKEN },
+      body !== undefined ? { "Content-Type": "application/json" } : {}),
+    body: body !== undefined ? JSON.stringify(body) : undefined,
+  });
+  const data = await res.json().catch(() => ({}));
+  if (!res.ok) throw new Error(data.error || res.status + " " + method + " " + path);
+  return data;
+}
+
+// ------------------------------------------------------------ rendering
+function renderCluster(rep) {
+  $("free-chips").textContent = rep.free_chips;
+  $("total-chips").textContent = rep.n_chips;
+  $("queue-depth").textContent = rep.queue_depth;
+  const util = rep.queue ? rep.queue.utilization_now : 0;
+  $("util-value").textContent = Math.round(util * 100) + "%";
+  $("util-meter").style.width = Math.min(100, util * 100) + "%";
+  $("dl-hits").textContent = rep.deadlines.deadline_hits;
+  $("dl-misses").textContent = rep.deadlines.deadline_misses;
+  $("preempted").textContent = rep.preemption.preempted_total;
+  $("resumed").textContent = rep.preemption.resumed_total;
+}
+
+function fmtDeadline(b) {
+  if (b.deadline_at == null) return "—";
+  const left = b.deadline_at - Date.now() / 1000;
+  if (left < 0) return "missed";
+  return left > 120 ? Math.round(left / 60) + "m left"
+                    : Math.round(left) + "s left";
+}
+
+function blockRow(b) {
+  const tr = document.createElement("tr");
+  const canAdmin = PROFILE && PROFILE.admin;
+  const auto = b.autostep;
+  const cells = [
+    ["<span class=mono>" + b.app_id + "</span>"],
+    [b.user],
+    ["<span class=state data-tone=" + (TONES[b.state] || "") + ">" +
+     b.state + "</span>"],
+    [b.n_chips, "num"],
+    [b.steps, "num"],
+    [b.priority, "num"],
+    [fmtDeadline(b)],
+    [auto ? "on · " + auto.steps_driven + " steps" +
+            (auto.max_rate_hz ? " · " + auto.max_rate_hz + "/s" : "")
+          : "off"],
+  ];
+  for (const [html, cls] of cells) {
+    const td = document.createElement("td");
+    if (cls) td.className = cls;
+    td.innerHTML = html;
+    tr.appendChild(td);
+  }
+  const td = document.createElement("td");
+  td.className = "controls";
+  const live = !["expired", "done", "failed", "denied"].includes(b.state);
+  const mk = (label, fn, show) => {
+    if (!show) return;
+    const btn = document.createElement("button");
+    btn.textContent = label;
+    btn.onclick = () => fn().then(refreshSoon).catch((e) => alert(e.message));
+    td.appendChild(btn);
+  };
+  mk(auto ? "autostep off" : "autostep on",
+     () => api("POST", "/v1/blocks/" + b.app_id + "/autostep",
+               { enabled: !auto }), live);
+  mk("pace", () => {
+    const v = prompt("max steps/s (empty = unpaced)", auto && auto.max_rate_hz || "");
+    if (v === null) return Promise.resolve();
+    return api("POST", "/v1/blocks/" + b.app_id + "/autostep",
+               { max_rate_hz: v === "" ? null : Number(v) });
+  }, live && !!auto);
+  mk("preempt", () => api("POST", "/v1/blocks/" + b.app_id + "/preempt", {}),
+     canAdmin && ["running", "active"].includes(b.state));
+  mk("resume", () => api("POST", "/v1/blocks/" + b.app_id + "/resume", {}),
+     canAdmin && b.state === "preempted");
+  mk("expire", () => api("POST", "/v1/blocks/" + b.app_id + "/expire", {}),
+     live);
+  tr.appendChild(td);
+  return tr;
+}
+
+async function refresh() {
+  const [rep, blocks] = await Promise.all([
+    api("GET", "/v1/cluster"), api("GET", "/v1/blocks")]);
+  renderCluster(rep);
+  const body = $("blocks-body");
+  body.replaceChildren(...blocks.blocks.map(blockRow));
+  $("no-blocks").hidden = blocks.blocks.length > 0;
+  return blocks.blocks;
+}
+
+function refreshSoon() {
+  if (refreshTimer) return;
+  refreshTimer = setTimeout(() => { refreshTimer = null; refresh(); }, 250);
+}
+
+// ------------------------------------------------------------ live feed
+function logEvent(ev) {
+  const log = $("event-log");
+  const li = document.createElement("li");
+  const seq = document.createElement("span");
+  seq.className = "seq";
+  seq.textContent = ev.seq;
+  const kind = document.createElement("span");
+  kind.className = "kind";
+  kind.textContent = ev.kind;
+  const detail = document.createElement("span");
+  detail.textContent = [
+    ev.app_id, ev.state, ev.action, ev.reason,
+    ev.kind === "step" ? (ev.step_s * 1000).toFixed(1) + "ms" : null,
+    ev.kind === "utilization"
+      ? Math.round(100 * ev.used_chips / ev.total_chips) + "%" : null,
+  ].filter(Boolean).join(" · ");
+  li.append(seq, kind, detail);
+  log.prepend(li);
+  while (log.children.length > 200) log.lastChild.remove();
+}
+
+function openStream(path) {
+  const es = new EventSource(
+    path + (path.includes("?") ? "&" : "?") + "access_token=" +
+    encodeURIComponent(TOKEN));
+  es.onopen = () => {
+    $("feed-state").textContent = "feed: live";
+    $("feed-state").dataset.state = "live";
+  };
+  es.onmessage = null;      // typed events only (event: <kind>)
+  for (const kind of ["state", "admitted", "enqueued", "dequeued",
+                      "preempted", "resumed", "registered", "autostep",
+                      "step", "utilization"]) {
+    es.addEventListener(kind, (msg) => {
+      const ev = JSON.parse(msg.data);
+      if (ev.kind !== "step" && ev.kind !== "utilization") refreshSoon();
+      logEvent(ev);
+    });
+  }
+  es.onerror = () => {
+    $("feed-state").textContent = "feed: reconnecting";
+    $("feed-state").dataset.state = "off";
+  };
+  sources.push(es);
+  return es;
+}
+
+function closeStreams() {
+  sources.forEach((es) => es.close());
+  sources = [];
+}
+
+async function connectFeeds(blocks) {
+  closeStreams();
+  if (PROFILE.admin) {
+    openStream("/v1/events/stream");
+    return;
+  }
+  // plain users: one scoped stream per owned, still-interesting block
+  for (const b of blocks) {
+    if (!["expired", "done", "failed", "denied"].includes(b.state))
+      openStream("/v1/blocks/" + b.app_id + "/events/stream");
+  }
+}
+
+// ----------------------------------------------------------- bootstrap
+async function connect() {
+  PROFILE = (await api("GET", "/v1/profile")).profile;
+  $("whoami").textContent = PROFILE.user + (PROFILE.admin ? " (admin)" : "");
+  $("app").hidden = false;
+  $("login-hint").hidden = true;
+  const blocks = await refresh();
+  await connectFeeds(blocks);
+  // periodic safety net: SSE covers liveness, this covers clock-driven
+  // fields (deadline countdowns) and any missed reconnect window
+  setInterval(refreshSoon, 5000);
+}
+
+$("auth-form").addEventListener("submit", (e) => {
+  e.preventDefault();
+  TOKEN = $("token-input").value.trim();
+  localStorage.setItem("pc_token", TOKEN);
+  connect().catch((err) => {
+    $("whoami").textContent = "auth failed: " + err.message;
+    $("app").hidden = true;
+    $("login-hint").hidden = false;
+  });
+});
+
+if (TOKEN) {
+  $("token-input").value = TOKEN;
+  connect().catch(() => { /* stored token went stale: wait for input */ });
+}

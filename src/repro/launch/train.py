@@ -39,6 +39,13 @@ def main(argv=None) -> int:
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--autostep", action="store_true",
+                    help="daemon-side stepping: the cluster's autostep "
+                         "engine drives the block to --steps (checkpoints "
+                         "included); no client step loop")
+    ap.add_argument("--pace", type=float, default=None,
+                    help="with --autostep: cap the engine at this many "
+                         "steps/s")
     args = ap.parse_args(argv)
 
     cfg = (configs.get_smoke(args.arch) if args.smoke
@@ -51,14 +58,19 @@ def main(argv=None) -> int:
                                 total_steps=args.steps)
 
     # one block spanning every available device, granted by the daemon
+    # (--autostep needs the background pump: the engine steps from there)
     n_dev = len(jax.devices())
     topo = Topology(n_pods=1, pod_x=n_dev, pod_y=1)
     daemon = ClusterDaemon(topo,
-                           ckpt_root=args.ckpt_dir or "artifacts/train_ckpt")
+                           ckpt_root=args.ckpt_dir or "artifacts/train_ckpt",
+                           background=args.autostep)
     job = JobSpec(cfg, shape, opt=opt_cfg, seed=args.seed,
                   collect_metrics=True,
                   # stable namespace so --resume finds earlier runs
-                  ckpt_namespace=cfg.name if args.ckpt_dir else None)
+                  ckpt_namespace=cfg.name if args.ckpt_dir else None,
+                  # periodic checkpoints under autostep come from the
+                  # engine (client-driven mode saves between chunks below)
+                  ckpt_every=(args.ckpt_every if args.ckpt_dir else 0))
     app_id, grant = daemon.submit("cli", f"train {cfg.name}", n_dev,
                                   job=job)
     assert grant is not None, "single-tenant pod must admit immediately"
@@ -93,13 +105,26 @@ def main(argv=None) -> int:
     daemon.bus.subscribe(on_step, kinds={"step"})
 
     t_start = time.time()
-    done = start_step
-    while done < args.steps:
-        chunk = min(args.ckpt_every or args.steps, args.steps - done)
-        daemon.run_steps({app_id: chunk})
-        done += chunk
+    if args.autostep:
+        # daemon-side execution: arm the engine and watch — zero client
+        # step calls; progress, metrics and checkpoints all flow from the
+        # pump thread through the event bus
+        from repro.core.block import BlockState
+        daemon.autostep_enable(app_id, until_steps=args.steps,
+                               max_rate_hz=args.pace)
+        while daemon.registry.get(app_id).state not in (
+                BlockState.DONE, BlockState.FAILED, BlockState.EXPIRED):
+            time.sleep(0.1)
         if args.ckpt_dir and args.ckpt_every:
-            daemon.save(app_id, async_=True)
+            daemon.save(app_id, async_=True)   # final-step checkpoint
+    else:
+        done = start_step
+        while done < args.steps:
+            chunk = min(args.ckpt_every or args.steps, args.steps - done)
+            daemon.run_steps({app_id: chunk})
+            done += chunk
+            if args.ckpt_dir and args.ckpt_every:
+                daemon.save(app_id, async_=True)
     wall = time.time() - t_start
 
     rt.ckpt.wait()                # an async save may still be landing
@@ -111,6 +136,7 @@ def main(argv=None) -> int:
     print(f"# done: {wall:.1f}s, {tok_s:.0f} tok/s, {loss_span}, "
           f"checkpoints={res['checkpoints']}")
     daemon.expire(app_id)
+    daemon.stop()          # no-op in deterministic (non --autostep) mode
     return 0
 
 

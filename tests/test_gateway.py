@@ -254,3 +254,240 @@ def test_event_feed_ordering_and_longpoll(gw):
     assert page3["events"], "long-poll returned empty despite a transition"
     assert any(e.get("state") == "expired" for e in page3["events"])
     assert waited < 5.0, "long-poll did not wake on the event"
+
+
+# --------------------------------------------------------------- SSE feed
+
+def sse_frames(server, path, token, max_lines=500, timeout=15):
+    """Read one SSE response into (ids, events) lists."""
+    r = urllib.request.Request(server.url + path)
+    r.add_header("Authorization", f"Bearer {token}")
+    ids, events = [], []
+    with urllib.request.urlopen(r, timeout=timeout) as resp:
+        assert resp.headers["Content-Type"].startswith("text/event-stream")
+        cur = {}
+        for i, raw in enumerate(resp):
+            line = raw.decode().rstrip("\n")
+            if i > max_lines:
+                break
+            if line.startswith("id: "):
+                cur["id"] = int(line[4:])
+            elif line.startswith("event: "):
+                cur["event"] = line[7:]
+            elif line.startswith("data: "):
+                cur["data"] = json.loads(line[6:])
+            elif line == "" and cur:
+                if "data" in cur:
+                    ids.append(cur["id"])
+                    events.append(cur)
+                cur = {}
+            if events and events[-1]["data"].get("state") == "expired":
+                break
+    return ids, events
+
+
+def test_sse_stream_framing_and_cursor_resume(gw):
+    """SSE framing: every frame carries id (the bus cursor), event (the
+    kind) and JSON data; ids are ordered; a second stream resuming from a
+    mid-cursor (as Last-Event-ID would) replays only the tail."""
+    server, daemon = gw
+    _, a = req(server, "POST", "/v1/submit", "tok-alice",
+               {"job_description": "streamed", "n_chips": 4, "job": SIM,
+                "autostep": {"until_steps": 6}})
+    app = a["app_id"]
+
+    def expire_when_done():
+        deadline = time.monotonic() + 10
+        while time.monotonic() < deadline:
+            _, st = req(server, "GET", f"/v1/blocks/{app}", "tok-alice")
+            if st["state"] == "done":
+                req(server, "POST", f"/v1/blocks/{app}/expire",
+                    "tok-alice", {})
+                return
+            time.sleep(0.02)
+
+    t = threading.Thread(target=expire_when_done)
+    t.start()
+    ids, events = sse_frames(
+        server, f"/v1/blocks/{app}/events/stream?after=0&max_s=10",
+        "tok-alice")
+    t.join()
+    assert ids == sorted(ids) and len(set(ids)) == len(ids)
+    kinds = [e["event"] for e in events]
+    assert kinds.count("step") == 6
+    states = [e["data"]["state"] for e in events if e["event"] == "state"]
+    assert states == ["approved", "confirmed", "active", "running",
+                      "done", "expired"]
+    for e in events:                      # id mirrors the data's seq
+        assert e["id"] == e["data"]["seq"]
+
+    # cursor resume: everything at/before the cursor is not replayed
+    mid = ids[len(ids) // 2]
+    ids2, events2 = sse_frames(
+        server, f"/v1/blocks/{app}/events/stream?after={mid}&max_s=2",
+        "tok-alice")
+    assert ids2 and min(ids2) > mid
+    assert ids2 == [i for i in ids if i > mid][:len(ids2)]
+
+    # ?access_token= authenticates the SSE stream (EventSource cannot
+    # set headers) but is NOT accepted on ordinary routes — session
+    # tokens must not ride URLs into access logs
+    r = urllib.request.Request(
+        server.url + f"/v1/blocks/{app}/events/stream"
+                     f"?after={mid}&max_s=1&access_token=tok-alice")
+    with urllib.request.urlopen(r, timeout=10) as resp:
+        assert resp.status == 200
+    s, _ = req(server, "GET", f"/v1/blocks/{app}?access_token=tok-alice")
+    assert s == 401
+
+
+def test_sse_disconnect_leaves_gateway_serving(gw):
+    """A client dropping its stream mid-flight must not wedge anything:
+    the handler thread notices on write and the server keeps serving."""
+    server, daemon = gw
+    _, a = req(server, "POST", "/v1/submit", "tok-alice",
+               {"job_description": "dropped", "n_chips": 4, "job": SIM})
+    app = a["app_id"]
+    r = urllib.request.Request(
+        server.url + f"/v1/blocks/{app}/events/stream?after=0&max_s=30")
+    r.add_header("Authorization", "Bearer tok-alice")
+    resp = urllib.request.urlopen(r, timeout=10)
+    resp.read(20)                 # stream is live...
+    resp.close()                  # ...client vanishes
+    for _ in range(3):            # gateway still serves requests promptly
+        s, st = req(server, "GET", f"/v1/blocks/{app}", "tok-alice")
+        assert s == 200
+    req(server, "POST", f"/v1/blocks/{app}/expire", "tok-alice", {})
+
+
+# ------------------------------------------------- autostep over the wire
+
+def test_autostep_routes_owner_gated(gw):
+    server, daemon = gw
+    _, a = req(server, "POST", "/v1/submit", "tok-alice",
+               {"job_description": "mine", "n_chips": 4, "job": SIM})
+    app = a["app_id"]
+    # bob cannot arm alice's block; alice can
+    s, _ = req(server, "POST", f"/v1/blocks/{app}/autostep", "tok-bob",
+               {"until_steps": 5})
+    assert s == 403
+    s, r = req(server, "POST", f"/v1/blocks/{app}/autostep", "tok-alice",
+               {"until_steps": 5, "ckpt_every": 2})
+    assert s == 200 and r["autostep"]["enabled"]
+    st = wait_state(server, app, "tok-alice", "done")
+    assert st["steps"] == 5
+    # pace-only body on a non-enabled block 400s cleanly
+    s, e = req(server, "POST", f"/v1/blocks/{app}/autostep", "tok-alice",
+               {"until_steps": "many"})
+    assert s == 400 and "autostep" in e["error"]
+    req(server, "POST", f"/v1/blocks/{app}/expire", "tok-alice", {})
+
+
+# ------------------------------------------------------ hardening knobs
+
+def test_rate_limit_429_and_body_cap_413(tmp_path):
+    topo = Topology(n_pods=1, pod_x=4, pod_y=2)
+    dev = jax.devices()[0]
+    daemon = ClusterDaemon(topo, devices=[dev] * topo.n_chips,
+                           ckpt_root=str(tmp_path / "ckpt"))
+    profiles = ProfileStore([UserProfile("a", "tok-a"),
+                             UserProfile("b", "tok-b")])
+    server = GatewayServer(daemon, profiles, rate_limit_rps=0.001,
+                           rate_limit_burst=3, max_body_bytes=256).start()
+    try:
+        codes = [req(server, "GET", "/v1/cluster", "tok-a")[0]
+                 for _ in range(5)]
+        assert codes[:3] == [200, 200, 200] and codes[3:] == [429, 429]
+        s, e = req(server, "GET", "/v1/cluster", "tok-a")
+        assert s == 429 and e["retry_after_s"] > 0
+        # buckets are per session: another token is unaffected
+        assert req(server, "GET", "/v1/cluster", "tok-b")[0] == 200
+        # ping and the dashboard assets bypass the limiter (no session)
+        assert req(server, "GET", "/v1/ping")[0] == 200
+        # body cap: an oversized POST is refused with 413 before reading.
+        # The server closes the connection without consuming the body, so
+        # a client mid-upload may see the reset instead of the response —
+        # both are the cap refusing the upload.
+        try:
+            s, e = req(server, "POST", "/v1/submit", "tok-b",
+                       {"n_chips": 4, "pad": "x" * 1000})
+            assert s == 413 and "cap" in e["error"]
+        except (ConnectionError, urllib.error.URLError):
+            pass
+        assert req(server, "GET", "/v1/ping")[0] == 200  # still serving
+        # under the cap still works (fresh token: limiter untouched)
+        s, r = req(server, "POST", "/v1/submit", "tok-b",
+                   {"job_description": "ok", "n_chips": 4})
+        assert s == 201
+    finally:
+        server.stop()
+
+
+# ------------------------------------------- session persistence (registry)
+
+def test_sessions_survive_gateway_restart(tmp_path):
+    """Profiles and feed cursors rehydrate from the Registry snapshot: a
+    brand-new GatewayServer over the same daemon (empty ProfileStore)
+    keeps authenticating the old tokens and resumes feeds from the
+    persisted cursor — and the snapshot survives on disk too."""
+    topo = Topology(n_pods=1, pod_x=4, pod_y=2)
+    dev = jax.devices()[0]
+    state = tmp_path / "state.json"
+    daemon = ClusterDaemon(topo, devices=[dev] * topo.n_chips,
+                           ckpt_root=str(tmp_path / "ckpt"),
+                           state_path=str(state))
+    profiles = ProfileStore([
+        UserProfile("alice", "tok-alice", priority=1, max_chips=8)])
+    server = GatewayServer(daemon, profiles).start()
+    _, a = req(server, "POST", "/v1/submit", "tok-alice",
+               {"job_description": "persist me", "n_chips": 4,
+                "job": SIM})
+    app = a["app_id"]
+    _, page = req(server, "GET", f"/v1/blocks/{app}/events", "tok-alice")
+    cursor = page["next_after"]
+    assert cursor > 0
+    server.stop()
+
+    # new gateway, EMPTY profile store: everything comes from the registry
+    server2 = GatewayServer(daemon, ProfileStore([])).start()
+    s, prof = req(server2, "GET", "/v1/profile", "tok-alice")
+    assert s == 200 and prof["profile"]["user"] == "alice"
+    assert prof["profile"]["priority"] == 1
+    s, cur = req(server2, "GET", "/v1/profile/cursors", "tok-alice")
+    assert cur["cursors"][app] == cursor
+    # after=resume continues from the stored cursor (nothing replayed)
+    s, page2 = req(server2, "GET",
+                   f"/v1/blocks/{app}/events?after=resume", "tok-alice")
+    assert s == 200 and page2["events"] == []
+    # the quota came back with the profile
+    assert daemon.scheduler.policy.quota_for("alice").max_chips == 8
+    server2.stop()
+
+    # and the on-disk snapshot itself carries the session state
+    snap = json.loads(state.read_text())
+    users = [p["user"] for p in snap["_sessions"]["profiles"]]
+    assert "alice" in users
+
+
+# ------------------------------------------------------------- dashboard
+
+def test_dashboard_static_serving(gw):
+    server, _ = gw
+    with urllib.request.urlopen(server.url + "/ui", timeout=5) as r:
+        html = r.read().decode()
+        assert r.headers["Content-Type"].startswith("text/html")
+    assert 'id="cluster-report"' in html and "/ui/app.js" in html
+    with urllib.request.urlopen(server.url + "/ui/app.js",
+                                timeout=5) as r:
+        js = r.read().decode()
+        assert r.headers["Content-Type"].startswith("text/javascript")
+    # the dashboard drives exactly the surfaces this suite already covers
+    for path in ("/v1/cluster", "/v1/blocks", "/v1/events/stream",
+                 "/v1/blocks/", "/autostep", "/preempt", "/resume"):
+        assert path in js, path
+    with urllib.request.urlopen(server.url + "/ui/style.css",
+                                timeout=5) as r:
+        assert r.headers["Content-Type"].startswith("text/css")
+    for bad in ("/ui/nope.js", "/ui/..%2Fhandlers.py", "/ui/.hidden"):
+        s, _ = req(server, "GET", bad, "tok-alice")
+        assert s == 404, bad
