@@ -37,6 +37,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 
+from repro.analysis import runtime_check
 from repro.core import interference
 from repro.core.block import (Block, BlockGrant, BlockRequest, BlockState,
                               TRANSITIONS)
@@ -353,6 +354,7 @@ class ClusterController:
                          step=(rt.step_count if rt is not None else 0))
         return new_grant
 
+    @runtime_check.guard_serialized("control-plane")
     def tick(self, now: Optional[float] = None) -> List[str]:
         """Periodic housekeeping: auto-expire blocks past their period,
         admit from the waitlist (including auto-resume of preempted

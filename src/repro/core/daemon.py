@@ -38,6 +38,7 @@ import time
 import traceback
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.analysis import runtime_check
 from repro.core.controller import ClusterController
 from repro.core.events import BlockEvent, EventBus
 from repro.core.topology import Topology
@@ -188,8 +189,9 @@ class ClusterDaemon:
                         continue     # submitter already gave up on it
                     cmd.claimed = True
                     try:
-                        cmd.result = self._table[cmd.name](*cmd.args,
-                                                           **cmd.kwargs)
+                        with runtime_check.serialized("control-plane"):
+                            cmd.result = self._table[cmd.name](*cmd.args,
+                                                               **cmd.kwargs)
                     except BaseException as e:   # delivered to the caller
                         cmd.error = e
                 cmd.done.set()
@@ -212,7 +214,8 @@ class ClusterDaemon:
             raise ValueError(f"unknown daemon command {name!r}")
         if not self.running or threading.current_thread() is self._thread:
             with self._serial:
-                return self._table[name](*args, **kwargs)
+                with runtime_check.serialized("control-plane"):
+                    return self._table[name](*args, **kwargs)
         cmd = Command(name=name, args=args, kwargs=kwargs)
         self._cmds.put(cmd)
         # bounded waits: a stop() racing this enqueue (queue drained just

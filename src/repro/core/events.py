@@ -34,11 +34,15 @@ import time
 from typing import Callable, Deque, Dict, List, Optional, Set
 
 
-# Semantic event kinds (emitted by scheduler/controller, consumed by the
-# Monitor).  Registry lifecycle transitions are additionally published as
-# kind="state" with the new state in the payload, so the per-block feed
-# shows *every* transition even when no scheduling decision was involved.
-KINDS = frozenset({
+# The declared event taxonomy — the single schema every producer literal,
+# consumer match and the dashboard's SSE subscription list are checked
+# against by ``python -m repro.analysis`` (events_check pass).  Emitted by
+# scheduler/controller, consumed by the Monitor.  Registry lifecycle
+# transitions are additionally published as kind="state" with the new state
+# in the payload, so the per-block feed shows *every* transition even when
+# no scheduling decision was involved.  Ordered: docs and the dashboard
+# enumerate kinds in this order.
+EVENT_KINDS = (
     "registered",   # application entered the registry
     "state",        # lifecycle transition (payload: state, note)
     "enqueued",     # parked on the admission waitlist
@@ -52,7 +56,9 @@ KINDS = frozenset({
     "utilization",  # periodic pod usage sample from the scheduler pump
     "autostep",     # engine opt-in lifecycle (payload: action = enabled |
                     #   disabled | paced | done, plus the drive config)
-})
+)
+
+KINDS = frozenset(EVENT_KINDS)
 
 
 @dataclasses.dataclass(frozen=True)

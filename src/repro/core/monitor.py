@@ -110,7 +110,10 @@ class Monitor:
                 s.last_metrics = dict(metrics)
 
     def heartbeat(self, block_id: str) -> None:
-        self._get(block_id).last_heartbeat = time.time()
+        # the store must happen under the same lock _get uses: the helper
+        # releases it on return, and an unguarded store can race dead_blocks
+        with self._lock:
+            self._get(block_id).last_heartbeat = time.time()
 
     # ------------------------------------------------------ admission queue
     def record_enqueue(self, app_id: str) -> None:

@@ -77,6 +77,7 @@ import dataclasses
 import time
 from typing import Callable, Dict, List, Mapping, Optional, Tuple, Union
 
+from repro.analysis import runtime_check
 from repro.core.block import BlockGrant, BlockState
 from repro.core.inflight import InflightWindow
 from repro.core.partition import AllocationError
@@ -527,6 +528,9 @@ class BlockScheduler:
                 self.ctl.registry.deny(
                     app_id, f"gang {entry.gang_id} member withdrawn")
 
+    # the waitlist dict has no lock of its own by design: every mutation is
+    # daemon-serialized, which REPRO_RACE_CHECK=1 asserts at runtime
+    @runtime_check.guard_serialized("control-plane")
     def pump(self, now: Optional[float] = None,
              sample_util: bool = False) -> List[str]:
         """Admit waitlisted admission units that now fit, in fair-share +
@@ -698,6 +702,7 @@ class BlockScheduler:
         return len(self.waitlist)
 
     # ------------------------------------------------------------- dispatch
+    @runtime_check.guard_serialized("control-plane")
     def run_dispatch(self, targets: Union[int, Mapping[str, int]],
                      max_inflight: Optional[int] = None,
                      ) -> Dict[str, List[Dict[str, float]]]:
@@ -722,8 +727,12 @@ class BlockScheduler:
                                  n_chips=blk.grant.n_chips,
                                  metrics=metrics or None)
 
+        # `max_inflight or ...` would turn an explicit 0 ("dispatch
+        # nothing") into the scheduler default — same falsy-zero trap as
+        # the model-time `now` parameters
         return drive(runtimes, targets,
-                     max_inflight=max_inflight or self.max_inflight,
+                     max_inflight=(max_inflight if max_inflight is not None
+                                   else self.max_inflight),
                      on_step=on_step)
 
 

@@ -39,6 +39,7 @@ import dataclasses
 import time
 from typing import Dict, List, Optional
 
+from repro.analysis import runtime_check
 from repro.core.block import BlockState
 from repro.engine.pacing import BlockView, PacingPolicy
 
@@ -230,6 +231,7 @@ class AutostepEngine:
             self._publish_step(app_id, drive, rec, now)
         return len(recs)
 
+    @runtime_check.guard_serialized("control-plane")
     def run_round(self, now: Optional[float] = None,
                   budget: Optional[int] = None) -> int:
         """One engine round: harvest, checkpoint, terminate, dispatch.

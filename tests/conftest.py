@@ -1,7 +1,15 @@
 """Shared test fixtures.  NOTE: no XLA_FLAGS device-count override here —
 unit tests see the real single CPU device; multi-device behaviour is tested
 via subprocesses (test_multidevice.py) per the dry-run isolation rule.
+
+``REPRO_RACE_CHECK=1`` turns the whole suite into a race-detection corpus:
+``repro.analysis.runtime_check`` instruments every lock created after
+configure time (acquisition-order recording + deadlock-cycle detection +
+serialized-section ownership), and the session-scoped gate below fails the
+run if any violation was recorded by the end.
 """
+import os
+
 import jax
 import numpy as np
 import pytest
@@ -19,3 +27,21 @@ def key():
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
+    if os.environ.get("REPRO_RACE_CHECK") == "1":
+        from repro.analysis import runtime_check
+        runtime_check.install()
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _race_check_gate():
+    """Assert the session recorded no lock-order or serialized-section
+    violations.  Runs as the last session teardown; a violation fails the
+    suite with the full list (the detectors record-and-continue so one bad
+    interleaving doesn't hide the rest)."""
+    yield
+    if os.environ.get("REPRO_RACE_CHECK") != "1":
+        return
+    from repro.analysis import runtime_check
+    vs = runtime_check.violations()
+    assert not vs, ("runtime race check recorded violations:\n"
+                    + "\n".join(f"  - {v}" for v in vs))

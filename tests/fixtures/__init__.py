@@ -1,0 +1,7 @@
+"""Seeded-violation corpus for the analyzer tests.
+
+Every ``seeded_*.py`` module here contains a deliberate concurrency or
+lifecycle bug that ``python -m repro.analysis`` must flag — they are the
+analyzer's regression fixtures, parsed (never imported/executed) by
+tests/test_analysis.py.  Do NOT "fix" them.
+"""

@@ -1,0 +1,20 @@
+"""SEEDED BUGS: event-taxonomy violations.
+
+Three ``unknown-event-kind`` hits the analyzer must produce: a publish of
+an undeclared kind, a subscribe filter on an undeclared kind, and a dead
+``ev.kind == ...`` consumer branch (the renamed-kind failure mode).
+"""
+
+
+def announce_reboot(bus, app_id):
+    bus.publish("block_rebooted", app_id=app_id)
+
+
+def watch_admissions(bus):
+    return bus.subscribe(kinds={"state", "rebooted"})
+
+
+def on_event(ev):
+    if ev.kind == "warp":
+        return "engaged"
+    return None

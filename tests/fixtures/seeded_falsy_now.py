@@ -1,0 +1,19 @@
+"""SEEDED BUG: the falsy-zero model-time trap.
+
+``now or time.time()`` silently replaces an explicit ``now=0.0`` (model
+time zero — a perfectly valid simulated clock reading) with wall-clock
+time.  The analyzer must produce a ``falsy-zero-param`` finding for each
+truthiness test below.
+"""
+import time
+
+
+def expired(deadline_at, now=None):
+    now = now or time.time()
+    return now >= deadline_at
+
+
+def remaining(deadline_at, now=None):
+    if not now:
+        now = time.time()
+    return max(0.0, deadline_at - now)

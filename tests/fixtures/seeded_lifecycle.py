@@ -1,0 +1,24 @@
+"""SEEDED BUGS: lifecycle-transition violations.
+
+Three distinct rule hits the analyzer must produce for this module:
+
+* ``illegal-transition-target`` — nothing may transition back to REQUESTED;
+* ``state-assign-bypass`` — direct ``blk.state = ...`` store skips
+  Block.transition's validation and history log;
+* ``illegal-transition-edge`` — a dominating guard pins the state to DONE,
+  and DONE -> CONFIRMED is not in TRANSITIONS.
+"""
+from repro.core.block import BlockState
+
+
+def resurrect(blk):
+    blk.transition(BlockState.REQUESTED, "resurrect")
+
+
+def force_running(blk):
+    blk.state = BlockState.RUNNING
+
+
+def reconfirm_done(blk):
+    assert blk.state == BlockState.DONE
+    blk.transition(BlockState.CONFIRMED, "redo the confirmation")

@@ -1,0 +1,40 @@
+"""SEEDED BUG: lock-order inversion (Alpha._lock <-> Beta._lock).
+
+``Alpha.ping`` takes Alpha._lock then calls ``Beta.poke`` (which takes
+Beta._lock); ``Beta.ping`` does the mirror image.  Two threads running the
+two ``ping``s concurrently can deadlock.  The analyzer must report a
+``lock-order-cycle`` finding for this module.
+"""
+import threading
+
+
+class Alpha:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.peer = Beta()
+        self.hits = 0
+
+    def ping(self):
+        with self._lock:
+            self.hits += 1
+            self.peer.poke()        # Beta._lock under Alpha._lock
+
+    def poke(self):
+        with self._lock:
+            self.hits += 1
+
+
+class Beta:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.owner = Alpha()
+        self.hits = 0
+
+    def ping(self):
+        with self._lock:
+            self.hits += 1
+            self.owner.poke()       # Alpha._lock under Beta._lock: cycle
+
+    def poke(self):
+        with self._lock:
+            self.hits += 1

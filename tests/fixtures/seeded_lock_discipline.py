@@ -1,0 +1,30 @@
+"""SEEDED BUGS: lock-discipline violations.
+
+``Counter.add`` establishes that ``total`` is guarded by ``_lock``;
+``Counter.sneak`` then mutates it bare — the analyzer must produce a
+``lock-discipline`` finding.  ``Counter.double`` calls ``snapshot`` (which
+re-acquires the same non-reentrant lock) while holding it — a
+``lock-self-deadlock`` finding.
+"""
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.total = 0
+
+    def add(self, n):
+        with self._lock:
+            self.total += n
+
+    def sneak(self, n):
+        self.total += n
+
+    def snapshot(self):
+        with self._lock:
+            return self.total
+
+    def double(self):
+        with self._lock:
+            return self.snapshot() * 2

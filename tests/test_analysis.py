@@ -1,0 +1,295 @@
+"""Tests for the concurrency & lifecycle verifier (repro.analysis).
+
+Three layers:
+
+* **CLI/gate** — the analyzer exits 0 on the real repo (empty baseline: the
+  tree is clean, nothing grandfathered) and non-zero on the seeded-violation
+  corpus in tests/fixtures/, with every seeded rule class firing.
+* **Lifecycle properties** — hypothesis-style fuzz (via the seeded compat
+  shim) of the TRANSITIONS table: every non-terminal state reaches a
+  terminal, random legal walks never raise, and a registry snapshot
+  round-trips every state value.
+* **Runtime detector units** — the lock-order recorder, self-deadlock
+  check and serialized-section ownership assertions, each against a
+  *private* Recorder so deliberately-seeded violations never pollute the
+  session-wide REPRO_RACE_CHECK gate.
+"""
+import json
+import os
+import threading
+
+import pytest
+
+from repro.analysis import analyze_paths, load_baseline
+from repro.analysis.__main__ import main as analysis_main
+from repro.analysis import runtime_check
+from repro.core.block import (Block, BlockGrant, BlockRequest, BlockState,
+                              TRANSITIONS)
+from repro.core.registry import Registry
+
+from tests._hypothesis_compat import given, settings, st
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+FIXTURES = os.path.join(_HERE, "fixtures")
+SRC_REPRO = os.path.normpath(os.path.join(_HERE, "..", "src", "repro"))
+
+TERMINAL = {s for s in BlockState if s not in TRANSITIONS}
+
+
+# --------------------------------------------------------------- CLI / gate
+def test_repo_is_clean_with_empty_baseline():
+    """The tree itself must carry zero error findings — nothing was
+    grandfathered into the baseline."""
+    baseline_path = os.path.join(SRC_REPRO, "analysis", "baseline.json")
+    assert load_baseline(baseline_path) == []
+    assert analysis_main([SRC_REPRO]) == 0
+
+
+def test_fixtures_fail_the_gate():
+    assert analysis_main([FIXTURES, "--no-baseline"]) == 1
+
+
+def test_every_seeded_rule_fires():
+    report, _model = analyze_paths([FIXTURES])
+    rules = {f.rule for f in report.errors()}
+    assert rules >= {
+        "lock-order-cycle",          # seeded_lock_cycle.py
+        "lock-discipline",           # seeded_lock_discipline.py
+        "lock-self-deadlock",        # seeded_lock_discipline.py
+        "state-assign-bypass",       # seeded_lifecycle.py
+        "illegal-transition-target",  # seeded_lifecycle.py
+        "illegal-transition-edge",   # seeded_lifecycle.py
+        "unknown-event-kind",        # seeded_events.py
+        "falsy-zero-param",          # seeded_falsy_now.py
+    }
+
+
+def test_seeded_findings_point_at_the_seeds():
+    report, _ = analyze_paths([FIXTURES])
+    by_rule = {}
+    for f in report.errors():
+        by_rule.setdefault(f.rule, set()).add(os.path.basename(f.path))
+    assert by_rule["lock-order-cycle"] == {"seeded_lock_cycle.py"}
+    assert by_rule["lock-discipline"] == {"seeded_lock_discipline.py"}
+    assert by_rule["state-assign-bypass"] == {"seeded_lifecycle.py"}
+    assert by_rule["unknown-event-kind"] == {"seeded_events.py"}
+    assert by_rule["falsy-zero-param"] == {"seeded_falsy_now.py"}
+
+
+def test_unknown_event_kind_covers_all_three_sides():
+    """publish literal, kinds= filter, and ev.kind comparison each fire."""
+    report, _ = analyze_paths([FIXTURES])
+    symbols = {f.symbol for f in report.errors()
+               if f.rule == "unknown-event-kind"}
+    assert "publish:block_rebooted" in symbols
+    assert "subscribe:kinds:rebooted" in symbols
+    assert any(s.endswith("kind==warp") for s in symbols)
+
+
+def test_baseline_suppresses_known_findings_by_fingerprint():
+    """A baselined finding stays suppressed when its line number moves —
+    fingerprints are (rule, path, symbol), not line-keyed."""
+    report, _ = analyze_paths([FIXTURES])
+    errors = report.errors()
+    assert errors
+    baseline = [f.fingerprint() for f in errors]
+    assert report.new_findings(baseline) == []
+    # dropping one baseline entry re-exposes exactly that finding
+    assert len(report.new_findings(baseline[1:])) == 1
+
+
+def test_cli_json_output(tmp_path):
+    out = tmp_path / "findings.json"
+    assert analysis_main([FIXTURES, "--no-baseline",
+                          "--json", str(out)]) == 1
+    data = json.loads(out.read_text())
+    assert {f["rule"] for f in data["findings"]} >= {"lock-order-cycle"}
+    assert "edges" in data["model"]["locks"]
+    assert "transitions" in data["model"]["lifecycle"]
+
+
+def test_describe_reports_learned_model(capsys):
+    assert analysis_main([SRC_REPRO, "--describe"]) == 0
+    model = json.loads(capsys.readouterr().out)
+    # the daemon serial lock must order before the registry lock, and the
+    # registry lock before the event bus (publish happens under _lock)
+    assert "ClusterDaemon._serial -> Registry._lock" in model["locks"]["edges"]
+    assert "Registry._lock -> EventBus._lock" in model["locks"]["edges"]
+    assert model["lifecycle"]["terminal"] == ["DENIED", "EXPIRED"]
+    assert set(model["events"]["kinds"]) == {
+        "registered", "state", "enqueued", "dequeued", "admitted",
+        "preempted", "resumed", "step", "utilization", "autostep"}
+
+
+# ------------------------------------------------------ lifecycle properties
+def test_every_nonterminal_reaches_terminal():
+    """TRANSITIONS closure: BFS from every state hits DENIED or EXPIRED."""
+    for start in BlockState:
+        seen, frontier = {start}, [start]
+        while frontier:
+            nxt = []
+            for s in frontier:
+                for t in TRANSITIONS.get(s, ()):
+                    if t not in seen:
+                        seen.add(t)
+                        nxt.append(t)
+            frontier = nxt
+        assert seen & TERMINAL, f"{start} cannot reach a terminal state"
+
+
+def test_terminal_states_have_no_exit():
+    for s in TERMINAL:
+        assert not TRANSITIONS.get(s), f"terminal {s} has outgoing edges"
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 10 ** 6), min_size=0, max_size=12))
+def test_random_legal_walks_never_raise(choices):
+    """Following any legal path from REQUESTED via Block.transition raises
+    nothing and every intermediate state stays in the declared set."""
+    blk = Block(request=BlockRequest(user="fuzz", job_description="walk",
+                                     n_chips=4))
+    assert blk.state is BlockState.REQUESTED
+    for c in choices:
+        targets = sorted(TRANSITIONS.get(blk.state, ()), key=lambda s: s.name)
+        if not targets:
+            break
+        blk.transition(targets[c % len(targets)], "fuzz step")
+        assert blk.state in set(BlockState)
+    # history logged one entry per transition
+    assert len(blk.history) == sum(
+        1 for h in blk.history if isinstance(h, tuple))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.sampled_from(sorted(BlockState, key=lambda s: s.name)))
+def test_registry_snapshot_roundtrips_every_state(tmp_path_factory, state):
+    """A block persisted in any lifecycle state reads back as exactly that
+    state from the JSON snapshot (the external UI's view)."""
+    path = str(tmp_path_factory.mktemp("reg") / "registry.json")
+    reg = Registry(state_path=path)
+    app_id = reg.register(BlockRequest(user="u", job_description="j",
+                                       n_chips=2))
+    blk = reg.get(app_id)
+    blk.grant = BlockGrant.new([(0, 0)], (1, 1), 60.0)
+    blk.state = state            # test-only bypass: pin the exact state
+    reg.persist()
+    with open(path) as f:
+        snap = json.load(f)
+    assert snap[app_id]["state"] == state.value
+    assert BlockState(snap[app_id]["state"]) is state
+
+
+def test_illegal_transition_raises_and_preserves_state():
+    blk = Block(request=BlockRequest(user="u", job_description="j",
+                                     n_chips=1))
+    with pytest.raises(ValueError, match="illegal transition"):
+        blk.transition(BlockState.RUNNING, "skip the queue")
+    assert blk.state is BlockState.REQUESTED
+
+
+# ------------------------------------------------- runtime detector (units)
+def test_lock_order_inversion_detected():
+    rec = runtime_check.Recorder()
+    a = runtime_check.make_lock("A", recorder=rec)
+    b = runtime_check.make_lock("B", recorder=rec)
+    with a:
+        with b:                      # order A -> B
+            pass
+    with b:
+        with a:                      # order B -> A: closes the cycle
+            pass
+    vs = rec.snapshot()
+    assert len(vs) == 1 and "lock-order inversion" in vs[0]
+    assert "A" in vs[0] and "B" in vs[0]
+
+
+def test_consistent_order_is_clean():
+    rec = runtime_check.Recorder()
+    a = runtime_check.make_lock("A", recorder=rec)
+    b = runtime_check.make_lock("B", recorder=rec)
+    for _ in range(3):
+        with a:
+            with b:
+                pass
+    assert rec.snapshot() == []
+    assert rec.order_edges() == ["A -> B"]
+
+
+def test_self_deadlock_detected_without_blocking():
+    rec = runtime_check.Recorder()
+    a = runtime_check.make_lock("A", reentrant=False, recorder=rec)
+    assert a.acquire()
+    assert a.acquire(False) is False     # real lock refuses; no hang
+    a.release()
+    vs = rec.snapshot()
+    assert len(vs) == 1 and "self-deadlock" in vs[0]
+
+
+def test_reentrant_lock_reacquire_is_clean():
+    rec = runtime_check.Recorder()
+    r = runtime_check.make_lock("R", reentrant=True, recorder=rec)
+    with r:
+        with r:
+            pass
+    assert rec.snapshot() == []
+
+
+def test_serialized_section_cross_thread_violation():
+    rec = runtime_check.Recorder()
+    outer = runtime_check.serialized("control-plane", recorder=rec)
+    outer.__enter__()                    # main thread owns the section
+    try:
+        def intruder():
+            with runtime_check.serialized("control-plane", recorder=rec):
+                pass
+        t = threading.Thread(target=intruder)
+        t.start()
+        t.join()
+    finally:
+        outer.__exit__(None, None, None)
+    vs = rec.snapshot()
+    assert len(vs) == 1 and "serialized-section violation" in vs[0]
+
+
+def test_serialized_section_same_thread_nesting_is_clean():
+    rec = runtime_check.Recorder()
+    with runtime_check.serialized("control-plane", recorder=rec):
+        with runtime_check.serialized("control-plane", recorder=rec):
+            pass
+    with runtime_check.serialized("control-plane", recorder=rec):
+        pass
+    assert rec.snapshot() == []
+
+
+def test_serialized_noop_when_not_installed():
+    """Outside REPRO_RACE_CHECK runs the guard must be free and inert."""
+    if runtime_check.installed():
+        pytest.skip("race check installed for this session")
+    ctx = runtime_check.serialized("control-plane")
+    with ctx:
+        pass
+    assert ctx is runtime_check.serialized("anything-else")
+
+
+def test_condition_works_with_instrumented_lock():
+    """threading.Condition over an instrumented lock: wait/notify cycle."""
+    rec = runtime_check.Recorder()
+    lk = runtime_check.make_lock("C", reentrant=True, recorder=rec)
+    cond = threading.Condition(lk)
+    hits = []
+
+    def waiter():
+        with cond:
+            while not hits:
+                cond.wait(timeout=5.0)
+            hits.append("woke")
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    with cond:
+        hits.append("set")
+        cond.notify_all()
+    t.join(timeout=5.0)
+    assert not t.is_alive() and hits == ["set", "woke"]
+    assert rec.snapshot() == []
