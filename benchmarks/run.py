@@ -115,6 +115,8 @@ SECTIONS = [
      "gateway_throughput.py", 1),
     ("engine", "autostep engine: steps/s vs client-driven + SSE fan-out",
      "engine_throughput.py", 1),
+    ("serve", "serve data plane: continuous batching vs sequential decode",
+     "serve_throughput.py", 1),
 ]
 
 

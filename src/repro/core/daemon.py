@@ -68,7 +68,7 @@ class ClusterDaemon:
         "preempt", "resume", "resize", "tick", "inject_chip_failure",
         "save", "restore", "set_quota",
         "autostep_enable", "autostep_disable", "autostep_pace",
-        "autostep_round",
+        "autostep_round", "generate",
     )
 
     def __init__(self, topo: Topology, devices: Optional[Sequence] = None,
@@ -118,6 +118,7 @@ class ClusterDaemon:
             "autostep_disable": self.engine.disable,
             "autostep_pace": self.engine.set_pace,
             "autostep_round": self.engine.run_round,
+            "generate": self._generate,
         }
         if background:
             self.start()
@@ -248,6 +249,30 @@ class ClusterDaemon:
             return None
         return rt.restore(step=step)
 
+    def _generate(self, app_id: str, prompt: Sequence[int],
+                  max_new_tokens: int = 16,
+                  eos_id: Optional[int] = None,
+                  now: Optional[float] = None) -> str:
+        """Queue a generate session on a paged serve block.  Tokens flow
+        back as ``generate``/``session`` events published by the autostep
+        engine's decode rounds (the gateway's generate endpoint streams
+        them; deterministic-mode callers drive ``autostep_round``)."""
+        blk = self.ctl.registry.get(app_id)       # KeyError -> caller 404
+        rt = self.ctl.runtimes.get(app_id)
+        start = getattr(rt, "start_session", None)
+        if rt is None or start is None or getattr(rt, "sessions", None) is None:
+            raise ValueError(
+                f"{app_id} has no generate surface: needs an active paged "
+                f"serve job (activate with kind=serve, paged=true)")
+        sid = start(list(prompt), max_new_tokens=max_new_tokens,
+                    eos_id=eos_id)
+        self.ctl.bus.publish("session", app_id=app_id,
+                             block_id=blk.block_id, user=blk.request.user,
+                             now=now, action="submitted", session=sid,
+                             prompt_tokens=len(prompt),
+                             max_new_tokens=int(max_new_tokens))
+        return sid
+
     # ------------------------------------------------------ typed wrappers
     def register(self, *a, **kw) -> str:
         return self.call("register", *a, **kw)
@@ -324,6 +349,15 @@ class ClusterDaemon:
 
     def autostep_pace(self, app_id: str, max_rate_hz: Optional[float]):
         return self.call("autostep_pace", app_id, max_rate_hz)
+
+    def generate(self, app_id: str, prompt: Sequence[int],
+                 max_new_tokens: int = 16, eos_id: Optional[int] = None,
+                 now: Optional[float] = None) -> str:
+        """Submit a generate session to a paged serve block; returns the
+        session id whose tokens stream back as ``generate`` events."""
+        return self.call("generate", app_id, prompt,
+                         max_new_tokens=max_new_tokens, eos_id=eos_id,
+                         now=now)
 
     def autostep_round(self, now: Optional[float] = None,
                        budget: Optional[int] = None) -> int:

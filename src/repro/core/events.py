@@ -56,6 +56,11 @@ EVENT_KINDS = (
     "utilization",  # periodic pod usage sample from the scheduler pump
     "autostep",     # engine opt-in lifecycle (payload: action = enabled |
                     #   disabled | paced | done, plus the drive config)
+    "session",      # generate-session lifecycle on a paged serve block
+                    #   (payload: action = submitted | admitted | evicted |
+                    #   finished, session, plus per-action detail)
+    "generate",     # one generated token from a continuous-batching decode
+                    #   step (payload: session, token, index, done)
 )
 
 KINDS = frozenset(EVENT_KINDS)

@@ -57,6 +57,15 @@ class JobSpec:
                                      # daemon-side autostep (client-driven
                                      # drivers call save() between batches
                                      # themselves; the engine reads this)
+    # ---- serve: continuous batching over a paged KV cache ----
+    paged: bool = False              # serve: slot-batched generate sessions
+                                     # over a shared page pool instead of the
+                                     # single dense prefill/decode context
+    page_size: int = 16              # rows per KV page
+    n_pages: int = 0                 # pool size; 0 derives full residency
+                                     # (max_slots * pages_per_seq + trash)
+    max_slots: int = 8               # concurrent decode batch width
+    max_seq_len: int = 0             # per-session context cap; 0 -> shape.seq_len
 
 
 @dataclasses.dataclass
@@ -79,6 +88,8 @@ class BlockRuntime(InflightWindow):
             ckpt_root, namespace=job.ckpt_namespace or grant.block_id)
         self.state: Any = None
         self.cache: Any = None
+        self.sessions = None         # paged serve: the DecodeScheduler
+        self._emissions: list = []   # paged serve: buffered generate events
         self.step_count = 0
         self.last_saved_step = 0     # step_count at the last checkpoint
         self.suspended = False
@@ -130,6 +141,13 @@ class BlockRuntime(InflightWindow):
             p_spec = plans.param_specs(params_abs, self.mesh, self.axes)
             self.state_shardings = {"params": plans.to_shardings(p_spec,
                                                                  self.mesh)}
+            if job.paged:
+                # the DecodeScheduler owns its own jitted prefill/decode;
+                # built in init_state (it needs the params) or on restore
+                self._step = None
+                self._prefill_fn = None
+                self._rng = jax.random.PRNGKey(job.seed + 1)
+                return
             dec = serve_lib.make_decode_step(job.cfg,
                                              sample=job.decode_sample)
 
@@ -159,12 +177,29 @@ class BlockRuntime(InflightWindow):
             params = jax.jit(
                 lambda k: model_lib.init_params(job.cfg, k),
                 out_shardings=self.state_shardings["params"])(key)
+            self.state = {"params": params}
+            if job.paged:
+                self.sessions = self._make_scheduler(params)
+                self.token = self.sessions.last_tokens_dev
+                return
             cache = model_lib.init_cache(job.cfg, job.shape.global_batch,
                                          job.shape.seq_len)
-            self.state = {"params": params}
             self.cache = cache
             self.cache_len = jnp.int32(0)
             self.token = jnp.zeros((job.shape.global_batch, 1), jnp.int32)
+
+    def _paged_geometry(self) -> Dict[str, int]:
+        job = self.job
+        return dict(page_size=job.page_size, n_pages=job.n_pages,
+                    max_slots=job.max_slots,
+                    max_seq_len=job.max_seq_len or job.shape.seq_len)
+
+    def _make_scheduler(self, params, init_pool: bool = True):
+        from repro.serve.decode_scheduler import DecodeScheduler
+        job = self.job
+        return DecodeScheduler(job.cfg, params, sample=job.decode_sample,
+                               seed=job.seed, init_pool=init_pool,
+                               **self._paged_geometry())
 
     def prefill(self, batch: Dict[str, Any]) -> None:
         """Serve blocks: process a prompt batch into the KV cache and seed
@@ -187,8 +222,49 @@ class BlockRuntime(InflightWindow):
         self.token = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         self.cache_len = jnp.int32(batch["tokens"].shape[1])
 
+    # ------------------------------------------------- generate sessions
+    # (paged serve only: the continuous-batching session surface the
+    # daemon's "generate" command and the autostep engine drive)
+    def start_session(self, prompt: Sequence[int], max_new_tokens: int = 16,
+                      eos_id: Optional[int] = None) -> str:
+        """Queue a generate session; tokens are emitted by subsequent decode
+        steps and drained with ``harvest()`` (engine-driven) or returned
+        directly by ``feed()`` (client-driven)."""
+        if self.sessions is None:
+            raise ValueError("block has no generate surface "
+                             "(needs a paged serve job)")
+        return self.sessions.submit(prompt, max_new_tokens=max_new_tokens,
+                                    eos_id=eos_id)
+
+    def feed(self, rounds: int = 1) -> list:
+        """Client-driven decode: run ``rounds`` continuous-batching steps
+        synchronously and return their emissions (buffered ones first)."""
+        assert self.sessions is not None, "feed() needs a paged serve job"
+        out = self.harvest()
+        for _ in range(rounds):
+            out.extend(self.sessions.step())
+            self.step_count += 1
+        return out
+
+    def harvest(self) -> list:
+        """Drain emissions buffered by engine-dispatched decode steps."""
+        out, self._emissions = self._emissions, []
+        return out
+
+    @property
+    def idle_serve(self) -> bool:
+        """True when engine-dispatched steps would be no-ops (paged serve
+        with no active or queued session) — the autostep engine skips
+        dispatching to keep the step/event stream quiet until a generate
+        arrives."""
+        return self.sessions is not None and not self.sessions.has_work
+
     # ---------------------------------------------------------------- step
     def _decode_once(self):
+        if self.job.paged:
+            self._emissions.extend(self.sessions.step())
+            self.token = self.sessions.last_tokens_dev
+            return
         if self.job.decode_sample:
             self._rng, key = jax.random.split(self._rng)
             self.token, self.cache = self._step(self.state["params"],
@@ -267,7 +343,12 @@ class BlockRuntime(InflightWindow):
     # ----------------------------------------------------------- persist
     def _decode_ctx(self) -> Dict[str, Any]:
         """A serve block's generation context — without it a restored
-        decoder would silently restart from an empty cache at position 0."""
+        decoder would silently restart from an empty cache at position 0.
+        Paged serve checkpoints the whole continuous-batching plane (page
+        pool, page tables, per-slot lengths, session metadata) so in-flight
+        generate sessions survive preemption."""
+        if self.job.paged:
+            return {"paged": self.sessions.state_tree()}
         return {"cache": self.cache, "token": self.token,
                 "cache_len": self.cache_len}
 
@@ -317,6 +398,8 @@ class BlockRuntime(InflightWindow):
             self.token = None
             self.cache_len = None
             self._prefill_fn = None
+            self.sessions = None     # device pool + jits dropped; host
+                                     # session state lives in the checkpoint
         self._step = None
         self.mesh = None
         self.devices = []
@@ -343,7 +426,9 @@ class BlockRuntime(InflightWindow):
                 "step_count": self.step_count}
         shardings = {"state": self.state_shardings, "step_count": None}
         if self.job.kind == "serve":
-            decode_like = (self._decode_ctx() if self.cache is not None
+            have_ctx = (self.sessions is not None if self.job.paged
+                        else self.cache is not None)
+            decode_like = (self._decode_ctx() if have_ctx
                            else self._abstract_decode())
             like["decode"] = decode_like
             # decode context restores to default placement (the same the
@@ -353,9 +438,17 @@ class BlockRuntime(InflightWindow):
         self.state = restored["state"]
         if self.job.kind == "serve":
             dec = restored["decode"]
-            self.cache = dec["cache"]
-            self.token = dec["token"]
-            self.cache_len = dec["cache_len"]
+            if self.job.paged:
+                if self.sessions is None:   # resume: rebuild without a
+                    self.sessions = self._make_scheduler(   # throwaway pool
+                        self.state["params"], init_pool=False)
+                self.sessions.params = self.state["params"]
+                self.sessions.load_state(dec["paged"])
+                self.token = self.sessions.last_tokens_dev
+            else:
+                self.cache = dec["cache"]
+                self.token = dec["token"]
+                self.cache_len = dec["cache_len"]
         self.step_count = int(restored["step_count"])
         self.last_saved_step = self.step_count   # state == checkpoint now
         return at
@@ -363,6 +456,10 @@ class BlockRuntime(InflightWindow):
     def _abstract_decode(self) -> Dict[str, Any]:
         # eval_shape: shape/dtype targets only — materializing a real cache
         # here would double peak device memory on the resume critical path
+        if self.job.paged:
+            from repro.serve.decode_scheduler import DecodeScheduler
+            return {"paged": DecodeScheduler.abstract_state(
+                self.job.cfg, **self._paged_geometry())}
         shape = self.job.shape
         return jax.eval_shape(lambda: {
             "cache": model_lib.init_cache(self.job.cfg, shape.global_batch,

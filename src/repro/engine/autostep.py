@@ -181,6 +181,32 @@ class AutostepEngine:
         drive.steps_driven += 1
         self.steps_driven += 1
 
+    def _harvest_generate(self, app_id: str, drive: _Drive, rt,
+                          now: Optional[float]) -> int:
+        """Publish a paged serve block's buffered continuous-batching
+        emissions: one ``generate`` event per token, one ``session`` event
+        per lifecycle edge (admitted/evicted/finished).  The gateway's
+        generate endpoint streams exactly these off the bus."""
+        harvest = getattr(rt, "harvest", None)
+        if harvest is None:
+            return 0
+        ems = harvest()
+        for em in ems:
+            detail = {k: v for k, v in em.items()
+                      if k not in ("event", "session")}
+            if em["event"] == "token":
+                self.ctl.bus.publish("generate", app_id=app_id,
+                                     block_id=drive.block_id,
+                                     user=drive.user, now=now,
+                                     session=em["session"], **detail)
+            else:
+                self.ctl.bus.publish("session", app_id=app_id,
+                                     block_id=drive.block_id,
+                                     user=drive.user, now=now,
+                                     action=em["event"],
+                                     session=em["session"], **detail)
+        return len(ems)
+
     def _maybe_checkpoint(self, drive: _Drive, rt) -> None:
         """Periodic checkpoint under autostep (client-driven drivers used
         to call ``daemon.save`` themselves between step batches).  Only
@@ -229,6 +255,7 @@ class AutostepEngine:
         recs = rt.drain()
         for rec in recs:
             self._publish_step(app_id, drive, rec, now)
+        self._harvest_generate(app_id, drive, rt, now)
         return len(recs)
 
     @runtime_check.guard_serialized("control-plane")
@@ -267,6 +294,7 @@ class AutostepEngine:
             for rec in rt.poll(block=False):
                 self._publish_step(app_id, drive, rec, now)
                 work += 1
+            work += self._harvest_generate(app_id, drive, rt, now)
             self._maybe_checkpoint(drive, rt)
             cfg = drive.config
             if cfg.until_steps is not None and \
@@ -290,6 +318,11 @@ class AutostepEngine:
                 self.disable(app_id, reason="run-until time reached",
                              now=now)
                 continue
+            if getattr(rt, "idle_serve", False):
+                pending += rt.inflight_depth
+                continue             # paged serve with no sessions: stay
+                                     # armed, dispatch nothing (the next
+                                     # generate command wakes it)
             room = self.ctl.scheduler.max_inflight - rt.inflight_depth
             if cfg.until_steps is not None:
                 room = min(room, cfg.until_steps - rt.step_count

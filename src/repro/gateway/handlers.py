@@ -112,8 +112,18 @@ def parse_job(spec: Optional[Dict]):
     opt = OptConfig(lr=float(spec.get("lr", 3e-4)),
                     warmup_steps=int(spec.get("warmup_steps", 2)),
                     total_steps=int(spec.get("total_steps", 100)))
+    extra = {}
+    if kind == "serve":
+        # continuous-batching data plane: paged serve jobs expose the
+        # generate endpoint (slot batch + shared page pool)
+        extra = dict(paged=bool(spec.get("paged", False)),
+                     page_size=int(spec.get("page_size", 16)),
+                     n_pages=int(spec.get("n_pages", 0)),
+                     max_slots=int(spec.get("max_slots", 8)),
+                     max_seq_len=int(spec.get("max_seq_len", 0)),
+                     decode_sample=bool(spec.get("decode_sample", False)))
     return JobSpec(cfg, shape, kind=kind, opt=opt,
-                   seed=int(spec.get("seed", 0)))
+                   seed=int(spec.get("seed", 0)), **extra)
 
 
 def _grant_dict(grant) -> Optional[Dict]:
@@ -145,7 +155,7 @@ class SSEStream:
                  kinds=None, max_s: float = MAX_SSE_S,
                  heartbeat_s: float = SSE_HEARTBEAT_S,
                  closing: Optional[threading.Event] = None,
-                 on_cursor=None):
+                 on_cursor=None, match=None, until=None):
         self.daemon = daemon
         self.after = after
         self.app_id = app_id
@@ -154,6 +164,12 @@ class SSEStream:
         self.heartbeat_s = heartbeat_s
         self.closing = closing or threading.Event()
         self.on_cursor = on_cursor          # cursor persistence callback
+        self.match = match                  # event predicate (None = all);
+                                            # the cursor still advances over
+                                            # filtered-out events
+        self.until = until                  # sent-event predicate: True
+                                            # ends the stream (generate:
+                                            # the session's final token)
 
     def serve(self, wfile) -> None:
         end = time.monotonic() + self.max_s
@@ -173,16 +189,25 @@ class SSEStream:
                     after, app_id=self.app_id, kinds=self.kinds,
                     timeout=min(1.0, remaining), limit=500)
                 if evs:
+                    send = [ev for ev in evs
+                            if self.match is None or self.match(ev)]
                     chunks = []
-                    for ev in evs:
+                    done = False
+                    for ev in send:
                         data = json.dumps(ev.to_dict(), default=str)
                         chunks.append(f"id: {ev.seq}\nevent: {ev.kind}\n"
                                       f"data: {data}\n\n")
-                    wfile.write("".join(chunks).encode())
-                    wfile.flush()
+                        if self.until is not None and self.until(ev):
+                            done = True
+                            break
+                    if chunks:
+                        wfile.write("".join(chunks).encode())
+                        wfile.flush()
                     after = evs[-1].seq
                     if self.on_cursor is not None:
                         self.on_cursor(after)
+                    if done:
+                        return
                 elif time.monotonic() >= next_beat:
                     wfile.write(b": keep-alive\n\n")
                     wfile.flush()
@@ -225,6 +250,8 @@ class GatewayApi:
             ("POST", r"^/v1/blocks/(?P<app_id>[\w-]+)/steps$", "steps"),
             ("POST", r"^/v1/blocks/(?P<app_id>[\w-]+)/autostep$",
              "autostep"),
+            ("POST", r"^/v1/blocks/(?P<app_id>[\w-]+)/generate$",
+             "generate"),
             ("POST", r"^/v1/blocks/(?P<app_id>[\w-]+)/preempt$",
              "preempt"),
             ("POST", r"^/v1/blocks/(?P<app_id>[\w-]+)/resume$", "resume"),
@@ -600,6 +627,73 @@ class GatewayApi:
             return 200, {"autostep": cfg}
         # a terminal-state block raises ValueError -> 409 via the router
         return 200, {"autostep": self.daemon.autostep_enable(app_id, **kw)}
+
+    def generate(self, profile, path_args, body, query):
+        """Submit a generate session to a paged serve block.  Default is
+        an SSE stream of the session's ``generate``/``session`` events
+        (token-by-token, ending at the final token); ``{"stream": false}``
+        long-polls the bus and returns the whole completion as JSON."""
+        app_id = path_args["app_id"]
+        self._owned_block(profile, app_id)
+        prompt = body.get("prompt")
+        if (not isinstance(prompt, list) or not prompt
+                or not all(isinstance(t, int) and not isinstance(t, bool)
+                           and t >= 0 for t in prompt)):
+            raise ApiError(400, "prompt must be a non-empty list of "
+                                "non-negative token ids")
+        try:
+            max_new = int(body.get("max_new_tokens", 16))
+        except (TypeError, ValueError):
+            raise ApiError(400, "bad max_new_tokens")
+        if not 1 <= max_new <= 100000:
+            raise ApiError(400, "max_new_tokens must be in [1, 100000]")
+        eos = body.get("eos_id")
+        eos = None if eos is None else int(eos)
+        # cursor taken BEFORE submission: the session's first tokens can
+        # land the moment the pump's next engine round runs, and a cursor
+        # taken after the submit would lose them
+        cursor = self.daemon.bus.latest_seq
+        sid = self.daemon.generate(app_id, prompt, max_new_tokens=max_new,
+                                   eos_id=eos)   # ValueError -> 409
+        if not self.daemon.engine.enabled(app_id):
+            # nothing decodes without a drive: arm daemon-side stepping
+            self.daemon.autostep_enable(app_id)
+        own = {"generate", "session"}
+
+        def match(ev):
+            return ev.payload.get("session") == sid
+
+        def until(ev):
+            return ((ev.kind == "generate" and ev.payload.get("done"))
+                    or (ev.kind == "session"
+                        and ev.payload.get("action") == "finished"))
+
+        if bool(body.get("stream", True)):
+            max_s = min(float(body.get("max_s", MAX_SSE_S)), MAX_SSE_S)
+            return 200, SSEStream(self.daemon, cursor, app_id=app_id,
+                                  kinds=own, max_s=max_s,
+                                  closing=self.closing,
+                                  match=match, until=until)
+        timeout = min(float(body.get("timeout_s", MAX_LONGPOLL_S)),
+                      MAX_LONGPOLL_S)
+        deadline = time.monotonic() + timeout
+        after, tokens, done = cursor, [], False
+        while not done:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                break
+            evs = self.daemon.wait_events(after, app_id=app_id, kinds=own,
+                                          timeout=min(1.0, remaining))
+            if not evs:
+                continue
+            after = evs[-1].seq
+            for ev in evs:
+                if not match(ev):
+                    continue
+                if ev.kind == "generate":
+                    tokens.append(ev.payload["token"])
+                done = done or until(ev)
+        return 200, {"session": sid, "tokens": tokens, "done": done}
 
     def preempt(self, profile, path_args, body, query):
         auth.require_admin(profile)

@@ -159,7 +159,7 @@ function openStream(path) {
   es.onmessage = null;      // typed events only (event: <kind>)
   for (const kind of ["state", "admitted", "enqueued", "dequeued",
                       "preempted", "resumed", "registered", "autostep",
-                      "step", "utilization"]) {
+                      "step", "utilization", "session", "generate"]) {
     es.addEventListener(kind, (msg) => {
       const ev = JSON.parse(msg.data);
       if (ev.kind !== "step" && ev.kind !== "utilization") refreshSoon();

@@ -1,0 +1,112 @@
+"""Pallas paged-attention gather kernel (single-token decode, GQA).
+
+Continuous-batching serve blocks keep every live session's K/V in one
+block-granular *page pool* instead of a per-sequence ``smax`` allocation:
+
+    k_pages / v_pages : (n_pages, page_size, Hkv, D | Dv)   the shared pool
+    page_table        : (B, pages_per_seq) int32            slot -> page ids
+    seq_lens          : (B,) int32                          valid tokens/slot
+
+Sequence position ``p`` of slot ``b`` lives at row ``p % page_size`` of page
+``page_table[b, p // page_size]``, so the gathered rows ``[0, seq_lens[b])``
+reproduce the dense cache layout exactly and decode attention stays the same
+masked softmax the dense path uses — just fetched page by page out of the
+pool rather than sliced from a contiguous per-sequence buffer.
+
+Kernel structure: grid ``(B, pages_per_seq)`` with the page sweep minor-most.
+``page_table`` and ``seq_lens`` ride scalar prefetch
+(``pltpu.PrefetchScalarGridSpec``) so the K/V BlockSpec index maps chase the
+page table when scheduling block DMAs — the gather happens in the pipeline,
+not as a materialized (B, S, ...) copy.  Each sweep stages the slot's pages
+into VMEM scratch (persistent across the minor grid dim, like
+``flash_attention``'s accumulators); the final step applies the *identical*
+op sequence as ``ref.attention`` (fp32 einsum -> masked softmax -> fp32
+einsum), so interpret mode matches the reference bit-for-bit — tests assert
+``array_equal``, not ``allclose``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30   # TPU-safe -inf stand-in (same convention as flash_attention)
+
+
+def _paged_attention_kernel(pt_ref, sl_ref, q_ref, k_ref, v_ref, o_ref,
+                            k_scr, v_scr, *, pages_per_seq: int,
+                            scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    # stage this page of the slot's K/V into the persistent VMEM scratch
+    k_scr[j] = k_ref[0]
+    v_scr[j] = v_ref[0]
+
+    @pl.when(j == pages_per_seq - 1)
+    def _finalize():
+        page, Hkv, D = k_scr.shape[1:]
+        Dv = v_scr.shape[-1]
+        S = pages_per_seq * page
+        Hq = q_ref.shape[1]
+        G = Hq // Hkv
+        # mirror ref.attention's exact shapes/ops (B=1, Sq=1): fp32 scores,
+        # length-masked softmax, fp32 weighted sum — bitwise identical in
+        # interpret mode
+        qf = q_ref[...].astype(jnp.float32).reshape(1, Hkv, G, 1, D)
+        kf = k_scr[...].reshape(1, S, Hkv, D).swapaxes(1, 2).astype(jnp.float32)
+        vf = v_scr[...].reshape(1, S, Hkv, Dv).swapaxes(1, 2).astype(jnp.float32)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * scale
+        k_pos = jax.lax.broadcasted_iota(jnp.int32, (S,), 0)
+        mask = k_pos < sl_ref[b]
+        s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+        o_ref[...] = o.reshape(1, Hq, Dv).astype(o_ref.dtype)
+
+
+def paged_attention_pallas(q, k_pages, v_pages, page_table, seq_lens, *,
+                           scale: float | None = None,
+                           interpret: bool = False):
+    """q: (B, Hq, D); pools: (P, page, Hkv, D|Dv); page_table: (B, maxp)
+    int32; seq_lens: (B,) int32.  Returns (B, Hq, Dv).
+
+    Attends each slot's single query over its ``seq_lens[b]`` gathered cache
+    entries (the new token's K/V already written at position
+    ``seq_lens[b] - 1``).  Pages beyond a slot's allocation may point
+    anywhere valid (the reserved trash page): their rows are masked out.
+    """
+    B, Hq, D = q.shape
+    _, page, Hkv, _ = k_pages.shape
+    Dv = v_pages.shape[-1]
+    maxp = page_table.shape[1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, maxp),
+        in_specs=[
+            pl.BlockSpec((1, Hq, D), lambda b, j, *_: (b, 0, 0)),
+            pl.BlockSpec((1, page, Hkv, D),
+                         lambda b, j, pt_ref, sl_ref: (pt_ref[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, page, Hkv, Dv),
+                         lambda b, j, pt_ref, sl_ref: (pt_ref[b, j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Hq, Dv), lambda b, j, *_: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((maxp, page, Hkv, D), k_pages.dtype),
+            pltpu.VMEM((maxp, page, Hkv, Dv), v_pages.dtype),
+        ],
+    )
+    kernel = functools.partial(_paged_attention_kernel,
+                               pages_per_seq=maxp, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Dv), q.dtype),
+        interpret=interpret,
+    )(page_table, seq_lens, q, k_pages, v_pages)

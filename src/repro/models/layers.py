@@ -128,6 +128,39 @@ def attention_fwd(p, x, a: AttentionConfig, *, positions, cache=None,
     return o @ p["wo"], new_cache
 
 
+def paged_attention_fwd(p, x, a: AttentionConfig, *, pages, page_table,
+                        seq_lens):
+    """Decode one token per slot against a paged KV pool (continuous
+    batching).  x: (B, 1, d); pages: dict(k/v: (n_pages, page, Hkv, D|Dv));
+    page_table: (B, maxp) int32; seq_lens: (B,) int32 — tokens already
+    cached per slot.  The new token's K/V is written at position
+    ``seq_lens[b]`` (its page must already be allocated in the table), then
+    the slot attends over ``seq_lens + 1`` entries — the exact analogue of
+    the dense decode branch in ``attention_fwd``, with per-slot positions
+    instead of one scalar ``cache_len``.  Returns (out, new_pages)."""
+    B, S, _ = x.shape
+    H, Hkv, D, vd = a.n_heads, a.n_kv_heads, a.head_dim, a.v_dim
+    q = (x @ p["wq"]).reshape(B, S, H, D)
+    k = (x @ p["wk"]).reshape(B, S, Hkv, D)
+    v = (x @ p["wv"]).reshape(B, S, Hkv, vd)
+    positions = seq_lens[:, None]                            # (B, 1) absolute
+    q = apply_rope(q.swapaxes(1, 2), positions, a.rope_theta)  # (B,H,1,D)
+    k = apply_rope(k.swapaxes(1, 2), positions, a.rope_theta)  # (B,Hkv,1,D)
+    v = v.swapaxes(1, 2)
+
+    page = pages["k"].shape[1]
+    # flat pool row of each slot's write position; inactive slots (their
+    # table rows all point at the reserved trash page 0) scatter harmlessly
+    row = page_table[jnp.arange(B), seq_lens // page] * page + seq_lens % page
+    k_pool = pages["k"].reshape(-1, Hkv, D).at[row].set(
+        k[:, :, 0].astype(pages["k"].dtype)).reshape(pages["k"].shape)
+    v_pool = pages["v"].reshape(-1, Hkv, vd).at[row].set(
+        v[:, :, 0].astype(pages["v"].dtype)).reshape(pages["v"].shape)
+    o = ops.paged_attention(q, k_pool, v_pool, page_table, seq_lens + 1)
+    o = o.swapaxes(1, 2).reshape(B, S, H * vd)
+    return o @ p["wo"], {"k": k_pool, "v": v_pool}
+
+
 def attention_cache_spec(a: AttentionConfig, batch: int, smax: int, dtype):
     return {"k": (batch, smax, a.n_kv_heads, a.head_dim),
             "v": (batch, smax, a.n_kv_heads, a.v_dim)}

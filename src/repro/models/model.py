@@ -18,9 +18,11 @@ import numpy as np
 
 from repro.models import transformer
 from repro.models.config import ModelConfig
-from repro.models.transformer import embed_inputs, forward, init_cache  # re-export
+from repro.models.transformer import (embed_inputs, forward,  # re-export
+                                      init_cache, init_paged_cache)
 
 init_params = transformer.init_params
+check_paged_support = transformer.check_paged_support
 
 
 def abstract_params(cfg: ModelConfig):
@@ -114,3 +116,45 @@ def decode_step(params, cfg: ModelConfig, token, cache, cache_len):
     logits, _, new_cache = forward(params, cfg, x, positions=positions,
                                    cache=cache, cache_len=cache_len)
     return logits[:, -1], new_cache
+
+
+# ---------------------------------------------------------------------------
+# paged serving (continuous batching)
+# ---------------------------------------------------------------------------
+
+def decode_step_paged(params, cfg: ModelConfig, token, cache, page_table,
+                      seq_lens):
+    """One decode step for every slot of a continuous batch.
+
+    token: (B, 1) int32 — each slot's last token (garbage for idle slots);
+    cache: stacked paged pool from ``init_paged_cache``;
+    page_table: (B, maxp) int32; seq_lens: (B,) int32 per-slot cache fill
+    (idle slots: 0 with a trash-page table row).
+    Returns (logits (B, V), new_cache)."""
+    x = embed_inputs(params, cfg, {"tokens": token})
+    positions = seq_lens[:, None]
+    logits, _, new_cache = forward(params, cfg, x, positions=positions,
+                                   cache=cache, cache_len=None,
+                                   page_table=page_table, seq_lens=seq_lens)
+    return logits[:, -1], new_cache
+
+
+def write_prefill_to_pages(pool, dense_cache, page_ids, page_size: int):
+    """Scatter a freshly prefilled dense cache (batch=1, smax a multiple of
+    ``page_size``) into the paged pool at the allocated ``page_ids``.
+
+    Leaf shapes: dense (ng, 1, smax, Hkv, D) -> pool (ng, n_pages, page,
+    Hkv, D).  The dense prefill wrote positions [0, plen); trailing rows of
+    the last page carry the dense cache's zero padding, overwritten in
+    place on later decode steps.  Bit-preserving: page row ``p`` receives
+    exactly dense row ``p``."""
+    ids = jnp.asarray(page_ids, jnp.int32)
+    npg = ids.shape[0]
+
+    def put(p, d):
+        ng, _, smax = d.shape[:3]
+        assert smax == npg * page_size, (smax, npg, page_size)
+        src = d[:, 0].reshape((ng, npg, page_size) + d.shape[3:])
+        return p.at[:, ids].set(src.astype(p.dtype))
+
+    return jax.tree.map(put, pool, dense_cache)

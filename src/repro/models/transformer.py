@@ -28,7 +28,7 @@ from repro.models import ssm
 from repro.models.config import ModelConfig
 from repro.models.layers import (_he, apply_norm, attention_fwd,
                                  attention_init, mla_fwd, mla_init, mlp_fwd,
-                                 mlp_init, norm_init)
+                                 mlp_init, norm_init, paged_attention_fwd)
 from repro.models.moe import moe_fwd, moe_init
 from repro.sharding import ctx as shard_ctx
 
@@ -125,9 +125,16 @@ def shared_extra_init(key, cfg: ModelConfig, dtype):
 # per-group forward
 # ---------------------------------------------------------------------------
 
-def _dense_sublayer_fwd(p, x, cfg, *, positions, cache, cache_len, causal=None):
+def _dense_sublayer_fwd(p, x, cfg, *, positions, cache, cache_len, causal=None,
+                        page_table=None, seq_lens=None):
     h = apply_norm(p["ln1"], x, cfg.norm)
-    if cfg.attention.is_mla:
+    # `is not None`: an all-zeros page table is a valid (trash-only) table
+    if page_table is not None:
+        a, new_cache = paged_attention_fwd(p["attn"], h, cfg.attention,
+                                           pages=cache,
+                                           page_table=page_table,
+                                           seq_lens=seq_lens)
+    elif cfg.attention.is_mla:
         a, new_cache = mla_fwd(p["attn"], h, cfg.attention,
                                positions=positions, cache=cache,
                                cache_len=cache_len)
@@ -141,9 +148,15 @@ def _dense_sublayer_fwd(p, x, cfg, *, positions, cache, cache_len, causal=None):
     return x, new_cache
 
 
-def _moe_sublayer_fwd(p, x, cfg, *, positions, cache, cache_len):
+def _moe_sublayer_fwd(p, x, cfg, *, positions, cache, cache_len,
+                      page_table=None, seq_lens=None):
     h = apply_norm(p["ln1"], x, cfg.norm)
-    if cfg.attention.is_mla:
+    if page_table is not None:
+        a, new_cache = paged_attention_fwd(p["attn"], h, cfg.attention,
+                                           pages=cache,
+                                           page_table=page_table,
+                                           seq_lens=seq_lens)
+    elif cfg.attention.is_mla:
         a, new_cache = mla_fwd(p["attn"], h, cfg.attention,
                                positions=positions, cache=cache,
                                cache_len=cache_len)
@@ -157,13 +170,15 @@ def _moe_sublayer_fwd(p, x, cfg, *, positions, cache, cache_len):
     return x + m, aux, new_cache
 
 
-def group_fwd(gp, x, cfg: ModelConfig, *, positions, cache, cache_len, extra):
+def group_fwd(gp, x, cfg: ModelConfig, *, positions, cache, cache_len, extra,
+              page_table=None, seq_lens=None):
     """Returns (x, aux, new_cache).  ``cache`` is this group's cache (or None)."""
     fam = cfg.family
     aux = jnp.zeros((), jnp.float32)
     if fam in ("dense", "vlm"):
         x, nc = _dense_sublayer_fwd(gp, x, cfg, positions=positions,
-                                    cache=cache, cache_len=cache_len)
+                                    cache=cache, cache_len=cache_len,
+                                    page_table=page_table, seq_lens=seq_lens)
         return x, aux, nc
     if fam == "encoder":
         x, nc = _dense_sublayer_fwd(gp, x, cfg, positions=positions,
@@ -175,14 +190,20 @@ def group_fwd(gp, x, cfg: ModelConfig, *, positions, cache, cache_len, extra):
             c_m = None if cache is None else cache["moe"]
             x, nc_d = _dense_sublayer_fwd(gp["dense"], x, cfg,
                                           positions=positions, cache=c_d,
-                                          cache_len=cache_len)
+                                          cache_len=cache_len,
+                                          page_table=page_table,
+                                          seq_lens=seq_lens)
             x, aux, nc_m = _moe_sublayer_fwd(gp["moe"], x, cfg,
                                              positions=positions, cache=c_m,
-                                             cache_len=cache_len)
+                                             cache_len=cache_len,
+                                             page_table=page_table,
+                                             seq_lens=seq_lens)
             nc = None if cache is None else {"dense": nc_d, "moe": nc_m}
             return x, aux, nc
         x, aux, nc = _moe_sublayer_fwd(gp, x, cfg, positions=positions,
-                                       cache=cache, cache_len=cache_len)
+                                       cache=cache, cache_len=cache_len,
+                                       page_table=page_table,
+                                       seq_lens=seq_lens)
         return x, aux, nc
     if fam == "xlstm":
         def m_step(x, inp):
@@ -307,6 +328,50 @@ def init_cache(cfg: ModelConfig, batch: int, smax: int):
 
 
 # ---------------------------------------------------------------------------
+# paged cache (continuous-batching serve)
+# ---------------------------------------------------------------------------
+
+def check_paged_support(cfg: ModelConfig) -> None:
+    """Paged decode covers the plain-GQA attention families; recurrent
+    states (xlstm/hybrid) and MLA's compressed cache page differently and
+    stay on the dense path."""
+    if cfg.family not in ("dense", "vlm", "moe") or cfg.attention is None:
+        raise ValueError(
+            f"paged decode unsupported for family {cfg.family!r}")
+    if cfg.attention.is_mla:
+        raise ValueError("paged decode does not support MLA caches")
+    if cfg.attention.sliding_window > 0:
+        raise ValueError("paged decode does not support sliding windows")
+
+
+def _paged_group_cache_init(cfg: ModelConfig, n_pages: int, page_size: int):
+    a = cfg.attention
+    dt = jnp.dtype(cfg.param_dtype)
+
+    def one():
+        return {"k": jnp.zeros((n_pages, page_size, a.n_kv_heads,
+                                a.head_dim), dt),
+                "v": jnp.zeros((n_pages, page_size, a.n_kv_heads,
+                                a.v_dim), dt)}
+
+    if cfg.family == "moe" and cfg.d_ff > 0:
+        return {"dense": one(), "moe": one()}
+    return one()
+
+
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int):
+    """Stacked (n_groups, ...) page-pool pytree shared by all live slots.
+    Page 0 is reserved as the trash page (never allocated to a session):
+    inactive slots' table rows point at it so their scatter writes and
+    gathered garbage stay masked out."""
+    check_paged_support(cfg)
+    one = _paged_group_cache_init(cfg, n_pages, page_size)
+    ng = n_groups(cfg)
+    return jax.tree.map(lambda t: jnp.broadcast_to(t[None], (ng,) + t.shape)
+                        .astype(t.dtype), one)
+
+
+# ---------------------------------------------------------------------------
 # full-stack params + forward
 # ---------------------------------------------------------------------------
 
@@ -352,10 +417,13 @@ def embed_inputs(params, cfg: ModelConfig, batch: Dict[str, Any]):
 
 
 def forward(params, cfg: ModelConfig, x, *, positions, cache=None,
-            cache_len=None):
+            cache_len=None, page_table=None, seq_lens=None):
     """Run the stack on embedded inputs x: (B, S, d).
 
-    Returns (logits (B, S, V), aux_loss, new_cache).
+    With ``page_table``/``seq_lens`` set, ``cache`` is the stacked paged
+    pool from ``init_paged_cache`` and decode runs the paged-attention path
+    (the table and lengths are shared across groups; each group scans its
+    own pool slice).  Returns (logits (B, S, V), aux_loss, new_cache).
     """
     extra = params.get("extra")
 
@@ -366,7 +434,8 @@ def forward(params, cfg: ModelConfig, x, *, positions, cache=None,
         else:
             gp, gc = inp
         x, a, nc = group_fwd(gp, x, cfg, positions=positions, cache=gc,
-                             cache_len=cache_len, extra=extra)
+                             cache_len=cache_len, extra=extra,
+                             page_table=page_table, seq_lens=seq_lens)
         return (x, aux + a), nc
 
     if cfg.remat != "none":

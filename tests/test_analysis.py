@@ -118,7 +118,8 @@ def test_describe_reports_learned_model(capsys):
     assert model["lifecycle"]["terminal"] == ["DENIED", "EXPIRED"]
     assert set(model["events"]["kinds"]) == {
         "registered", "state", "enqueued", "dequeued", "admitted",
-        "preempted", "resumed", "step", "utilization", "autostep"}
+        "preempted", "resumed", "step", "utilization", "autostep",
+        "session", "generate"}
 
 
 # ------------------------------------------------------ lifecycle properties
