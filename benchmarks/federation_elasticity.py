@@ -1,0 +1,160 @@
+"""Federation elasticity: time-to-admit under a pod-capacity ramp and
+blast-radius containment on pod death.
+
+Part A (ramp, ISSUE 8 acceptance): one boot pod holds a 9-block backlog of
+4-chip requests — one runs, eight wait.  Pods attach at runtime (1 -> 4);
+each ``attach_pod`` pumps the waitlist inline, so the time-to-admit for a
+backlog block collapses from "wait for a resident's usage period to end"
+to "one attach round-trip".  Measures the per-attach admit latency and how
+much of the backlog the ramp absorbed.
+
+Part B (blast radius): four pods, one RUNNING 4-chip tenant each, steps in
+flight.  One pod dies.  The victim preempts (checkpoint -> release ->
+requeue); the other three tenants must keep their exact placement, the
+dead pod must hold zero owned chips, and attaching spare capacity must
+auto-resume the victim elsewhere.  Blast radius = victims / tenants.
+
+Uses SimRuntime so the numbers isolate control-plane behaviour from XLA
+noise.  Output follows the repo's benchmark CSV convention:
+name,us_per_call,derived.
+
+    PYTHONPATH=src python benchmarks/federation_elasticity.py
+"""
+import os
+import statistics
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.core.block import BlockState
+from repro.core.daemon import ClusterDaemon
+from repro.core.scheduler import SimRuntime
+from repro.core.topology import Topology
+
+CHIPS = 4               # every block fills one 2x2 pod
+BACKLOG = 9             # ramp backlog (1 admitted + 8 queued at start)
+RAMP = 3                # pods attached at runtime: 1 -> 4
+STEP_S = 0.001
+
+
+def build() -> ClusterDaemon:
+    topo = Topology(n_pods=1, pod_x=2, pod_y=2)
+    dev = jax.devices()[0]
+    return ClusterDaemon(topo, devices=[dev] * topo.n_chips,
+                         ckpt_root="artifacts/federation_bench_ckpt")
+
+
+def start_block(d: ClusterDaemon, app: str) -> None:
+    blk = d.registry.get(app)
+    d.confirm(app, blk.grant.token)
+    d.registry.set_state(app, BlockState.ACTIVE)
+    d.registry.set_state(app, BlockState.RUNNING)
+    d.runtimes[app] = SimRuntime(STEP_S)
+
+
+def bench_ramp():
+    """Returns (per-attach admit latencies us, submit-to-admit waits s,
+    blocks admitted by the ramp)."""
+    d = build()
+    submitted, apps = {}, []
+    for i in range(BACKLOG):
+        app, grant = d.submit(f"user{i}", "ramp backlog", CHIPS,
+                              duration_s=60.0)
+        submitted[app] = time.perf_counter()
+        apps.append(app)
+        if grant is not None:
+            start_block(d, app)
+    admitted = {a for a in apps
+                if d.registry.get(a).state != BlockState.QUEUED}
+    base = len(admitted)
+    attach_us, waits = [], []
+    for r in range(RAMP):
+        t0 = time.perf_counter()
+        d.attach_pod(2, 2, name=f"ramp{r}")
+        attach_us.append((time.perf_counter() - t0) * 1e6)
+        for a in apps:
+            if a in admitted:
+                continue
+            blk = d.registry.get(a)
+            if blk.state != BlockState.QUEUED:
+                admitted.add(a)
+                waits.append(time.perf_counter() - submitted[a])
+                if blk.state == BlockState.APPROVED:
+                    start_block(d, a)
+    return attach_us, waits, len(admitted) - base
+
+
+def bench_blast():
+    """Returns (victims, tenants, leaked chips, untouched co-tenants,
+    fail latency us, victim resumed after spare attach)."""
+    d = build()
+    for r in range(3):
+        d.attach_pod(2, 2, name=f"pod{r + 1}")
+    apps = []
+    for i in range(4):
+        app, grant = d.submit(f"tenant{i}", "resident", CHIPS,
+                              duration_s=60.0)
+        assert grant is not None, "tenant did not fit its own pod"
+        start_block(d, app)
+        apps.append(app)
+    d.run_steps({a: 2 for a in apps})          # steps in flight everywhere
+    victim_pod = d.registry.get(apps[-1]).grant.coords[0][0]
+    before = {a: list(d.registry.get(a).grant.coords) for a in apps}
+    t0 = time.perf_counter()
+    victims = d.fail_pod(victim_pod, reason="bench: power loss")
+    fail_us = (time.perf_counter() - t0) * 1e6
+    dead = d.pods.pod(victim_pod)
+    leaked = sum(1 for info in dead.part.chips.values()
+                 if info.owner is not None)
+    untouched = sum(
+        1 for a in apps if a not in victims
+        and d.registry.get(a).state == BlockState.RUNNING
+        and list(d.registry.get(a).grant.coords) == before[a])
+    d.attach_pod(2, 2, name="spare")           # capacity returns...
+    resumed = all(d.registry.get(a).state == BlockState.RUNNING
+                  for a in victims)            # ...victim resumes on it
+    return victims, apps, leaked, untouched, fail_us, resumed
+
+
+def main():
+    attach_us, waits, ramp_admitted = bench_ramp()
+    victims, apps, leaked, untouched, fail_us, resumed = bench_blast()
+
+    p50_attach = statistics.median(attach_us)
+    p50_wait = statistics.median(waits) if waits else 0.0
+    radius = 100.0 * len(victims) / len(apps)
+
+    print("name,us_per_call,derived")
+    print(f"ramp_attach_to_admit_p50,{p50_attach:.0f},{ramp_admitted}")
+    print(f"ramp_backlog_wait_p50,{p50_wait * 1e6:.0f},{p50_wait:.4f}")
+    print(f"ramp_pods_attached,0,{RAMP}")
+    print(f"blast_fail_pod,{fail_us:.0f},{len(victims)}")
+    print(f"blast_radius_pct,0,{radius:.0f}")
+    print(f"blast_leaked_chips,0,{leaked}")
+    print(f"blast_untouched_cotenants,0,{untouched}")
+    print(f"blast_victim_resumed,0,{int(resumed)}")
+
+    ok = True
+    if ramp_admitted < RAMP:
+        print("WARNING: pod ramp admitted less than one block per attach",
+              file=sys.stderr)
+        ok = False
+    if leaked:
+        print("WARNING: dead pod still owns chips", file=sys.stderr)
+        ok = False
+    if untouched != len(apps) - len(victims):
+        print("WARNING: pod death disturbed a co-tenant placement",
+              file=sys.stderr)
+        ok = False
+    if not resumed:
+        print("WARNING: victim did not auto-resume on spare capacity",
+              file=sys.stderr)
+        ok = False
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

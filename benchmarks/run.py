@@ -117,6 +117,8 @@ SECTIONS = [
      "engine_throughput.py", 1),
     ("serve", "serve data plane: continuous batching vs sequential decode",
      "serve_throughput.py", 1),
+    ("federation", "federation: pod-ramp time-to-admit + death blast radius",
+     "federation_elasticity.py", 1),
 ]
 
 

@@ -43,18 +43,26 @@ from repro.core.block import (Block, BlockGrant, BlockRequest, BlockState,
                               TRANSITIONS)
 from repro.core.events import EventBus
 from repro.core.monitor import Monitor
-from repro.core.partition import AllocationError, Partitioner, mesh_shape_for
+from repro.core.partition import AllocationError, mesh_shape_for
 from repro.core.registry import Registry
 from repro.core.runtime import BlockRuntime, JobSpec, SimJobSpec
 from repro.core.scheduler import BlockScheduler, SimRuntime
 from repro.core.topology import Coord, Topology
+from repro.federation import (FederatedPartitioner, FederatedPlacer,
+                              HealthMonitor, PodRegistry)
+from repro.federation.pods import POD_DEAD, POD_READY, to_local
+
+# lifecycle states that hold chips (a PREEMPTED block holds nothing)
+_HOLDING = (BlockState.APPROVED, BlockState.CONFIRMED, BlockState.ACTIVE,
+            BlockState.RUNNING, BlockState.DONE)
 
 
 class ClusterController:
     def __init__(self, topo: Topology, devices: Optional[Sequence] = None,
                  ckpt_root: str = "artifacts/ckpt",
                  state_path: Optional[str] = None,
-                 bus: Optional[EventBus] = None):
+                 bus: Optional[EventBus] = None,
+                 placer: Optional[FederatedPlacer] = None):
         self.topo = topo
         self.devices = list(devices) if devices is not None else jax.devices()
         if len(self.devices) < topo.n_chips:
@@ -66,10 +74,39 @@ class ClusterController:
         # scheduling decisions, and the Monitor subscribes instead of
         # being called directly
         self.bus = bus or EventBus()
-        self.partitioner = Partitioner(topo)
-        self.registry = Registry(state_path=state_path, bus=self.bus)
         self.monitor = Monitor()
         self.monitor.subscribe_to(self.bus)
+        # the boot topology is carved into one federation pod per paper pod
+        # (pod p owns the matching contiguous device slice, preserving the
+        # pre-federation chip_index device mapping); more pods attach and
+        # detach at runtime via attach_pod/detach_pod
+        self.pods = PodRegistry(bus=self.bus)
+        pod_chips = topo.pod_x * topo.pod_y
+        for p in range(topo.n_pods):
+            self.pods.attach(
+                topo.pod_x, topo.pod_y,
+                self.devices[p * pod_chips:(p + 1) * pod_chips],
+                name=f"boot{p}", boot=True, pod_id=p)
+        self.placer = placer or FederatedPlacer()
+        self.partitioner = FederatedPartitioner(self.pods, self.placer)
+        self.health = HealthMonitor(self.pods)
+        self.registry = Registry(state_path=state_path, bus=self.bus)
+        # re-attach runtime pods recorded in the registry snapshot (their
+        # devices are not persistable — they come back as sim pods on the
+        # host's first device, the same replication the CI smokes use)
+        for entry in self.registry.pods_snapshot():
+            pid = int(entry["pod_id"])
+            if (entry.get("boot") or entry.get("phase") == POD_DEAD
+                    or self.pods.get(pid) is not None):
+                continue
+            px, py = int(entry["pod_x"]), int(entry["pod_y"])
+            self.pods.attach(px, py, [self.devices[0]] * (px * py),
+                             name=entry.get("name"), pod_id=pid,
+                             power_budget_chips=entry.get(
+                                 "power_budget_chips"))
+            phase = entry.get("phase", POD_READY)
+            if phase != POD_READY:        # draining/degraded survives reboot
+                self.pods.set_phase(pid, phase)
         self.runtimes: Dict[str, BlockRuntime] = {}   # app_id -> runtime
         self.ckpt_root = ckpt_root
         self.scheduler = BlockScheduler(self)
@@ -80,7 +117,15 @@ class ClusterController:
 
     # -------------------------------------------------- device mapping
     def devices_for(self, coords: Sequence[Coord]) -> List:
-        return [self.devices[self.topo.chip_index(c)] for c in coords]
+        out = []
+        for c in coords:
+            pod = self.pods.pod(c[0])
+            out.append(pod.devices[pod.topo.chip_index((0, c[1], c[2]))])
+        return out
+
+    def total_chips(self) -> int:
+        """Federation-wide capacity (live pods only)."""
+        return self.pods.total_chips()
 
     # -------------------------------------------------- workflow (Fig. 2)
     def register(self, user: str, job_description: str, n_chips: int,
@@ -325,6 +370,7 @@ class ClusterController:
         assert blk.state == BlockState.PREEMPTED, (app_id, blk.state)
         assert blk.grant is not None
         old = blk.grant
+        old_pod = old.coords[0][0] if old.coords else None
         n = n_chips or old.n_chips
         coords = self.partitioner.allocate(n, old.block_id,
                                            pod=blk.request.pod)
@@ -352,21 +398,148 @@ class ClusterController:
                          block_id=new_grant.block_id, user=blk.request.user,
                          n_chips=n,
                          step=(rt.step_count if rt is not None else 0))
+        if old_pod is not None and coords and coords[0][0] != old_pod:
+            # cross-pod resume: the block migrated toward other capacity
+            self.bus.publish("migrated", app_id=app_id,
+                             block_id=new_grant.block_id,
+                             user=blk.request.user, from_pod=old_pod,
+                             to_pod=coords[0][0], n_chips=n)
         return new_grant
 
     @runtime_check.guard_serialized("control-plane")
     def tick(self, now: Optional[float] = None) -> List[str]:
         """Periodic housekeeping: auto-expire blocks past their period,
-        admit from the waitlist (including auto-resume of preempted
-        blocks), sample pod utilization."""
+        advance pod health (evicting residents of newly dead pods), admit
+        from the waitlist (including auto-resume of preempted blocks),
+        sample federation utilization."""
         expired = self.registry.expired(now)
         for app_id in expired:
             self.expire(app_id, now=now)
+        for pod_id in self.health.check(now):
+            self.fail_pod(pod_id, reason="missed heartbeats", now=now)
         # sample_util: the pump publishes the utilization sample from the
         # held-chips snapshot it already computes per round — no second
         # inventory scan here (one sample per tick, as before)
         self.scheduler.pump(now, sample_util=True)
         return expired
+
+    # ---------------------------------------------------------- federation
+    def attach_pod(self, pod_x: int, pod_y: int, name: Optional[str] = None,
+                   devices: Optional[Sequence] = None,
+                   power_budget_chips: Optional[float] = None,
+                   now: Optional[float] = None) -> Dict:
+        """Attach capacity at runtime.  The pump runs immediately after, so
+        QUEUED and PREEMPTED blocks migrate toward the new pod without the
+        daemon restarting.  Without explicit ``devices`` the pod replicates
+        the host's first device (a sim pod — the CI dashboard idiom)."""
+        n = pod_x * pod_y
+        pod = self.pods.attach(
+            pod_x, pod_y,
+            list(devices) if devices is not None else [self.devices[0]] * n,
+            name=name, power_budget_chips=power_budget_chips, now=now)
+        self.registry.store_pods(self.pods.snapshot())
+        self.scheduler.pump(now)
+        return pod.describe()
+
+    def drain_pod(self, pod_id: int, now: Optional[float] = None) -> Dict:
+        """Stop placing new blocks on the pod; residents keep running."""
+        pod = self.pods.set_phase(pod_id, "draining", now=now)
+        self.registry.store_pods(self.pods.snapshot())
+        return pod.describe()
+
+    def detach_pod(self, pod_id: int, force: bool = False,
+                   now: Optional[float] = None) -> Dict:
+        """Remove a pod.  Refuses while blocks are resident unless
+        ``force``, which evicts them first (preempt + migrate, the same
+        path a pod death takes — graceful, so nothing is lost)."""
+        pod = self.pods.pod(pod_id)            # KeyError -> unknown pod
+        residents = self.pod_residents(pod_id)
+        if residents and not force:
+            raise ValueError(
+                f"pod {pod_id} has {len(residents)} resident block(s); "
+                f"drain first or detach with force")
+        if residents:
+            # drain before evicting: a READY pod would satisfy the
+            # migration's resize *in place* and the residents would never
+            # leave the pod being removed
+            self.pods.set_phase(pod_id, "draining", now=now)
+            self._evict_pod_residents(pod_id, f"pod {pod.name} detached",
+                                      now=now)
+        self.pods.detach(pod_id, now=now)
+        self.registry.store_pods(self.pods.snapshot())
+        self.scheduler.pump(now)
+        return pod.describe()
+
+    def fail_pod(self, pod_id: int, reason: str = "pod died",
+                 now: Optional[float] = None) -> List[str]:
+        """A pod (and every chip in it) is gone: mark it dead, evict every
+        resident block into PREEMPTED via its checkpoint, and migrate them
+        toward surviving capacity.  Returns the evicted app ids."""
+        self.pods.set_phase(pod_id, POD_DEAD, now=now)
+        self.registry.store_pods(self.pods.snapshot())
+        victims = self._evict_pod_residents(pod_id, reason, now=now)
+        self.scheduler.pump(now)
+        return victims
+
+    def pod_heartbeat(self, pod_id: int,
+                      now: Optional[float] = None) -> Dict:
+        """Health heartbeat from a pod agent; first beat arms monitoring."""
+        return self.health.beat(pod_id, now=now).describe()
+
+    def pod_residents(self, pod_id: int) -> List[str]:
+        """App ids currently holding chips on this pod."""
+        out = []
+        for app_id in self.registry.by_state(*_HOLDING):
+            blk = self.registry.get(app_id)
+            if (blk.grant is not None and blk.grant.coords
+                    and blk.grant.coords[0][0] == pod_id):
+                out.append(app_id)
+        return out
+
+    def _evict_pod_residents(self, pod_id: int, reason: str,
+                             now: Optional[float] = None) -> List[str]:
+        """Clear every resident block off a pod, leaking nothing: executing
+        blocks preempt (checkpoint, release, requeue ahead of class);
+        non-executing holders migrate their grant to another pod, or
+        terminate cleanly when nothing fits anywhere."""
+        victims = []
+        for app_id in self.pod_residents(pod_id):
+            blk = self.registry.get(app_id)
+            victims.append(app_id)
+            if blk.state in (BlockState.ACTIVE, BlockState.RUNNING):
+                self.preempt(app_id, reason=reason, now=now)
+                continue
+            # APPROVED/CONFIRMED/DONE: chips but no executing job — same
+            # handling as a chip failure before activation
+            try:
+                coords = self.partitioner.resize(blk.grant.block_id,
+                                                 blk.grant.n_chips)
+                blk.grant = BlockGrant(block_id=blk.grant.block_id,
+                                       coords=coords,
+                                       mesh_shape=blk.grant.mesh_shape,
+                                       token=blk.grant.token,
+                                       expires_at=blk.grant.expires_at)
+                old_rt = self.runtimes.get(app_id)
+                if old_rt is not None:
+                    self.runtimes[app_id] = BlockRuntime.rebuild(
+                        old_rt, blk.grant, self.devices_for(coords),
+                        self.ckpt_root)
+                self.registry.persist()
+                self.bus.publish("migrated", app_id=app_id,
+                                 block_id=blk.block_id,
+                                 user=blk.request.user, now=now,
+                                 from_pod=pod_id, to_pod=coords[0][0],
+                                 n_chips=len(coords))
+            except AllocationError:
+                rt = self.runtimes.pop(app_id, None)
+                drain = getattr(rt, "drain", None)
+                if drain is not None:
+                    drain()
+                self.partitioner.release(blk.grant.block_id)
+                self.registry.set_state(
+                    app_id, BlockState.EXPIRED,
+                    f"{reason}; no replacement rectangle free — resubmit")
+        return victims
 
     # ------------------------------------------------ concurrent execution
     def step_all(self, rounds: int = 1, sync_every: int = 1) -> Dict[str, List[Dict]]:
@@ -518,9 +691,31 @@ class ClusterController:
 
     # ------------------------------------------------------- interference
     def interference_report(self) -> interference.InterferenceReport:
-        blocks = {}
+        """Link contention among executing blocks, analyzed per pod in each
+        pod's own geometry (blocks in different pods share zero fabric by
+        construction — only the abstract DCN — so cross-pod pairs are
+        recorded as zero shared links)."""
+        by_pod: Dict[int, Dict[str, List[Coord]]] = {}
         for app_id in self.registry.by_state(BlockState.ACTIVE,
                                              BlockState.RUNNING):
             blk = self.registry.get(app_id)
-            blocks[blk.block_id] = blk.grant.coords
-        return interference.analyze_blocks(self.topo, blocks)
+            pid = blk.grant.coords[0][0]
+            by_pod.setdefault(pid, {})[blk.block_id] = to_local(
+                blk.grant.coords)
+        block_links: Dict[str, int] = {}
+        shared: Dict[Tuple[str, str], int] = {}
+        slowdown: Dict[str, float] = {}
+        for pid, blocks in sorted(by_pod.items()):
+            pod = self.pods.get(pid)
+            if pod is None:
+                continue
+            rep = interference.analyze_blocks(pod.topo, blocks)
+            block_links.update(rep.block_links)
+            shared.update(rep.shared_links)
+            slowdown.update(rep.slowdown)
+        ids = sorted(block_links)
+        for i in range(len(ids)):
+            for j in range(i + 1, len(ids)):
+                shared.setdefault((ids[i], ids[j]), 0)
+        return interference.InterferenceReport(
+            block_links=block_links, shared_links=shared, slowdown=slowdown)

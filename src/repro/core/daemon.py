@@ -15,10 +15,14 @@ Two execution modes, one API:
   thread.  Every mutating call from any thread is wrapped in a typed
   ``Command`` and enqueued; the pump executes commands strictly one at a
   time and, between commands, drives the periodic ``tick()`` (auto-expiry,
-  waitlist admission, auto-resume, utilization sampling) that callers had
-  to drive by hand before.  Serializing all mutations through one thread
-  is what makes a multi-user HTTP gateway safe to point at the controller
-  without sprinkling locks through the scheduler.
+  waitlist admission, auto-resume, heartbeat health decay, utilization
+  sampling) that callers had to drive by hand before.  Engine rounds run
+  on one worker thread per live federation pod (``run_round(pod=...)``),
+  so a slow pod's harvest never stalls another pod's pump — but every
+  round still takes the same daemon lock, so federation adds threads
+  without adding interleavings.  Serializing all mutations through one
+  lock is what makes a multi-user HTTP gateway safe to point at the
+  controller without sprinkling locks through the scheduler.
 
 * **Deterministic single-thread mode** — the default.  Calls execute
   inline on the caller's thread (still serialized by a reentrant lock) and
@@ -43,6 +47,7 @@ from repro.core.controller import ClusterController
 from repro.core.events import BlockEvent, EventBus
 from repro.core.topology import Topology
 from repro.engine import AutostepEngine, PacingPolicy
+from repro.federation.pods import POD_DEAD
 
 
 @dataclasses.dataclass
@@ -69,6 +74,8 @@ class ClusterDaemon:
         "save", "restore", "set_quota",
         "autostep_enable", "autostep_disable", "autostep_pace",
         "autostep_round", "generate",
+        "attach_pod", "drain_pod", "detach_pod", "fail_pod",
+        "pod_heartbeat",
     )
 
     def __init__(self, topo: Topology, devices: Optional[Sequence] = None,
@@ -77,10 +84,12 @@ class ClusterDaemon:
                  background: bool = False,
                  tick_interval_s: float = 0.05,
                  autostep_interval_s: float = 0.001,
-                 pacing: Optional[PacingPolicy] = None):
+                 pacing: Optional[PacingPolicy] = None,
+                 placer=None):
         self.ctl = ClusterController(topo, devices=devices,
                                      ckpt_root=ckpt_root,
-                                     state_path=state_path)
+                                     state_path=state_path,
+                                     placer=placer)
         # the autostep engine drives RUNNING blocks from the pump thread
         # (or inline via autostep_round); the controller drains a victim's
         # in-flight window through it before a preemption suspend
@@ -119,7 +128,15 @@ class ClusterDaemon:
             "autostep_pace": self.engine.set_pace,
             "autostep_round": self.engine.run_round,
             "generate": self._generate,
+            "attach_pod": ctl.attach_pod,
+            "drain_pod": ctl.drain_pod,
+            "detach_pod": ctl.detach_pod,
+            "fail_pod": ctl.fail_pod,
+            "pod_heartbeat": ctl.pod_heartbeat,
         }
+        #: per-pod engine worker threads (background mode): pod_id ->
+        #: thread.  Only the pump thread mutates this dict.
+        self._pod_workers: Dict[int, threading.Thread] = {}
         if background:
             self.start()
 
@@ -144,6 +161,9 @@ class ClusterDaemon:
         self._stop.set()
         self._thread.join(timeout)
         self._thread = None
+        for th in list(self._pod_workers.values()):
+            th.join(timeout)
+        self._pod_workers.clear()
         # fail queued commands instead of leaving their submitters hanging
         while True:
             try:
@@ -162,26 +182,13 @@ class ClusterDaemon:
     def _pump_loop(self) -> None:
         last_tick = time.monotonic()
         while not self._stop.is_set():
-            idle = self.tick_interval_s
-            if self.engine.armed:
-                # engine-driven blocks progress between commands; while
-                # work is flowing (or in flight) the pump spins at the
-                # autostep cadence instead of the tick interval
-                with self._serial:
-                    try:
-                        self.engine.run_round()
-                    except Exception:
-                        # an engine bug must not kill the service loop —
-                        # but it must not busy-spin on a stale busy flag
-                        # or fail silently either
-                        self.engine.last_round_busy = False
-                        if not self._engine_error_logged:
-                            self._engine_error_logged = True
-                            traceback.print_exc()
-                if self.engine.last_round_busy:
-                    idle = self.autostep_interval_s
+            # federation: one engine worker per live pod drives that pod's
+            # residents at the autostep cadence; the pump itself only
+            # serves commands and the periodic tick, so a slow pod's
+            # rounds never stall another pod (or command latency)
+            self._sync_pod_workers()
             try:
-                cmd = self._cmds.get(timeout=idle)
+                cmd = self._cmds.get(timeout=self.tick_interval_s)
             except queue.Empty:
                 cmd = None
             if cmd is not None:
@@ -203,6 +210,49 @@ class ClusterDaemon:
                     except Exception:
                         pass   # a tick must never kill the service loop
                 last_tick = time.monotonic()
+
+    def _sync_pod_workers(self) -> None:
+        """Keep one engine worker thread alive per live pod (pump thread
+        only — the dict has a single writer by construction).  Workers
+        exit on their own when their pod dies or detaches; dead threads
+        are reaped here so a re-attached pod id gets a fresh worker."""
+        for pid in list(self._pod_workers):
+            if not self._pod_workers[pid].is_alive():
+                del self._pod_workers[pid]
+        for p in self.ctl.pods.live():
+            if p.pod_id not in self._pod_workers:
+                th = threading.Thread(target=self._pod_worker,
+                                      args=(p.pod_id,),
+                                      name=f"pod-worker-{p.pod_id}",
+                                      daemon=True)
+                self._pod_workers[p.pod_id] = th
+                th.start()
+
+    def _pod_worker(self, pod_id: int) -> None:
+        """Per-pod engine pump: drives ``run_round(pod=pod_id)`` for this
+        pod's residents while the pod is alive.  Rounds are serialized
+        with every other mutation via the daemon lock, so federation adds
+        threads without adding interleavings — it changes *who* pumps,
+        not what can overlap."""
+        while not self._stop.is_set():
+            pod = self.ctl.pods.get(pod_id)
+            if pod is None or pod.phase == POD_DEAD:
+                return               # detached/dead: the worker retires
+            busy = False
+            if self.engine.armed:
+                with self._serial:
+                    try:
+                        self.engine.run_round(pod=pod_id)
+                        busy = self.engine.last_round_busy
+                    except Exception:
+                        # an engine bug must not kill the worker — but it
+                        # must not busy-spin or fail silently either
+                        self.engine.last_round_busy = False
+                        if not self._engine_error_logged:
+                            self._engine_error_logged = True
+                            traceback.print_exc()
+            self._stop.wait(self.autostep_interval_s if busy
+                            else self.tick_interval_s)
 
     # -------------------------------------------------------------- command
     def call(self, name: str, *args, **kwargs):
@@ -360,10 +410,46 @@ class ClusterDaemon:
                          now=now)
 
     def autostep_round(self, now: Optional[float] = None,
-                       budget: Optional[int] = None) -> int:
+                       budget: Optional[int] = None,
+                       pod: Optional[int] = None) -> int:
         """Drive one engine round inline (deterministic mode / tests;
-        background mode runs rounds from the pump thread automatically)."""
-        return self.call("autostep_round", now=now, budget=budget)
+        background mode runs rounds from the per-pod workers
+        automatically).  ``pod`` restricts the round to that pod's
+        residents."""
+        return self.call("autostep_round", now=now, budget=budget, pod=pod)
+
+    # ------------------------------------------------------- federation
+    def attach_pod(self, pod_x: int, pod_y: int, name: Optional[str] = None,
+                   devices: Optional[Sequence] = None,
+                   power_budget_chips: Optional[float] = None,
+                   now: Optional[float] = None) -> Dict:
+        """Attach a new pod at runtime: its chips join the federated free
+        pool immediately and the next pump admits queued/preempted blocks
+        onto it (no daemon restart)."""
+        # the pod name rides positionally: call()'s own first parameter
+        # is also ``name`` (the command), so the kwarg would collide
+        return self.call("attach_pod", pod_x, pod_y, name, devices,
+                         power_budget_chips=power_budget_chips, now=now)
+
+    def drain_pod(self, pod_id: int, now: Optional[float] = None) -> Dict:
+        """Stop placing new blocks on a pod (residents keep running)."""
+        return self.call("drain_pod", pod_id, now=now)
+
+    def detach_pod(self, pod_id: int, force: bool = False,
+                   now: Optional[float] = None) -> Dict:
+        """Remove a pod.  Refuses while residents hold chips unless
+        ``force`` (which evicts/migrates them first)."""
+        return self.call("detach_pod", pod_id, force=force, now=now)
+
+    def fail_pod(self, pod_id: int, reason: str = "pod died",
+                 now: Optional[float] = None) -> List[str]:
+        """Declare a pod dead (fault injection / admin): every resident
+        is preempted or migrated; returns the victim app ids."""
+        return self.call("fail_pod", pod_id, reason=reason, now=now)
+
+    def pod_heartbeat(self, pod_id: int,
+                      now: Optional[float] = None) -> Dict:
+        return self.call("pod_heartbeat", pod_id, now=now)
 
     # ------------------------------------------------------------ reads
     # (thread-safe structures; never queued behind commands)
@@ -395,6 +481,14 @@ class ClusterDaemon:
     def topo(self) -> Topology:
         return self.ctl.topo
 
+    @property
+    def pods(self):
+        return self.ctl.pods
+
+    def list_pods(self) -> List[Dict]:
+        """Public federation view: every pod's directory entry."""
+        return self.ctl.pods.describe_all()
+
     def runtime(self, app_id: str):
         return self.ctl.runtimes.get(app_id)
 
@@ -416,6 +510,9 @@ class ClusterDaemon:
             "est_steps": blk.request.est_steps,
             "gang_id": blk.request.gang_id,
             "block_id": blk.block_id,
+            "pod": (blk.grant.coords[0][0]
+                    if blk.grant and blk.grant.coords
+                    else blk.request.pod),
             "coords": list(blk.grant.coords) if blk.grant else None,
             "mesh_shape": list(blk.grant.mesh_shape) if blk.grant else None,
             "expires_at": blk.grant.expires_at if blk.grant else None,
@@ -437,8 +534,12 @@ class ClusterDaemon:
         topo = self.ctl.topo
         return {
             "n_pods": topo.n_pods, "pod_x": topo.pod_x, "pod_y": topo.pod_y,
-            "n_chips": topo.n_chips,
+            # federation totals: chips across every *live* pod (boot +
+            # runtime-attached), not just the boot topology
+            "n_chips": self.ctl.total_chips(),
             "free_chips": self.ctl.partitioner.free_capacity(),
+            "pods": self.ctl.pods.describe_all(),
+            "federation": self.ctl.monitor.federation_report(),
             # raw waitlist length, not queue_depth(): that would prune —
             # a mutation — outside the command serialization
             "queue_depth": len(self.ctl.scheduler.waitlist),

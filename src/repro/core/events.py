@@ -61,6 +61,11 @@ EVENT_KINDS = (
                     #   finished, session, plus per-action detail)
     "generate",     # one generated token from a continuous-batching decode
                     #   step (payload: session, token, index, done)
+    "pod",          # federation pod lifecycle (payload: action = joined |
+                    #   left | drained | degraded | dead | recovered, plus
+                    #   pod, name, phase, n_chips)
+    "migrated",     # a block came back on a different pod than it was
+                    #   evicted from (payload: from_pod, to_pod, n_chips)
 )
 
 KINDS = frozenset(EVENT_KINDS)

@@ -49,6 +49,12 @@ class Monitor:
         self.resumed_total = 0
         self.progress_lost_steps: List[int] = []  # per eviction, pre-save
         self.resume_waits: List[float] = []       # seconds evicted->resumed
+        # federation accounting (pod lifecycle + cross-pod migration)
+        self.pods_joined_total = 0
+        self.pods_lost_total = 0                  # left or died
+        self.pods_degraded_total = 0
+        self.migrated_total = 0
+        self.migrations: List[Dict] = []          # {app_id, from_pod, to_pod}
 
     def _get(self, block_id: str) -> BlockStats:
         with self._lock:
@@ -87,11 +93,16 @@ class Monitor:
                                    p.get("progress_lost_steps", 0))
         elif ev.kind == "utilization":
             self.sample_utilization(p["used_chips"], p["total_chips"])
+        elif ev.kind == "pod":
+            self.record_pod_event(p.get("action", ""))
+        elif ev.kind == "migrated":
+            self.record_migration(ev.app_id, p.get("from_pod"),
+                                  p.get("to_pod"))
 
     def subscribe_to(self, bus) -> None:
         bus.subscribe(self.on_event,
                       kinds={"step", "enqueued", "dequeued", "admitted",
-                             "preempted", "utilization"})
+                             "preempted", "utilization", "pod", "migrated"})
 
     def record_step(self, block_id: str, step_s: float, n_chips: int,
                     metrics: Optional[Dict[str, float]] = None) -> None:
@@ -219,6 +230,35 @@ class Monitor:
             for p, ws in sorted(self.queue_waits_by_class.items()):
                 rep[f"p50_wait_p{p}_s"] = statistics.median(ws) if ws else 0.0
             return rep
+
+    # ------------------------------------------------------------ federation
+    def record_pod_event(self, action: str) -> None:
+        with self._lock:
+            if action == "joined":
+                self.pods_joined_total += 1
+            elif action in ("left", "dead"):
+                self.pods_lost_total += 1
+            elif action == "degraded":
+                self.pods_degraded_total += 1
+
+    def record_migration(self, app_id: Optional[str], from_pod,
+                         to_pod) -> None:
+        with self._lock:
+            self.migrated_total += 1
+            self.migrations.append({"app_id": app_id, "from_pod": from_pod,
+                                    "to_pod": to_pod})
+            if len(self.migrations) > 2048:
+                self.migrations = self.migrations[-1024:]
+
+    def federation_report(self) -> Dict[str, float]:
+        """Pod lifecycle + migration counters for the cluster report."""
+        with self._lock:
+            return {
+                "pods_joined_total": self.pods_joined_total,
+                "pods_lost_total": self.pods_lost_total,
+                "pods_degraded_total": self.pods_degraded_total,
+                "migrated_total": self.migrated_total,
+            }
 
     def sample_utilization(self, used_chips: int, total_chips: int) -> None:
         with self._lock:

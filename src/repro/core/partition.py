@@ -244,6 +244,34 @@ class Partitioner:
             return [c for c, info in self.chips.items()
                     if info.owner == block_id]
 
+    def placements(self) -> Dict[str, List[Coord]]:
+        """Snapshot of current ownership: ``{block_id: coords}``.  Feeds the
+        federation placer's interference scoring (core/interference.py)."""
+        with self._lock:
+            out: Dict[str, List[Coord]] = {}
+            for c, info in self.chips.items():
+                if info.owner is not None:
+                    out.setdefault(info.owner, []).append(c)
+            return out
+
+    def suspend_owners(self, block_ids: Sequence[str]) -> Dict[Coord, str]:
+        """Temporarily free these blocks' chips for a preemption what-if and
+        return the saved ownership for ``restore_owners``.  The federation's
+        gang dry-run uses this pair instead of reaching into ``chips``."""
+        with self._lock:
+            ids = set(block_ids)
+            saved: Dict[Coord, str] = {}
+            for c, info in self.chips.items():
+                if info.owner in ids:
+                    saved[c] = info.owner
+                    info.owner = None
+            return saved
+
+    def restore_owners(self, saved: Dict[Coord, str]) -> None:
+        with self._lock:
+            for c, owner in saved.items():
+                self.chips[c].owner = owner
+
     # ------------------------------------------------------------- elastic
     def resize(self, block_id: str, new_n_chips: int,
                pod: Optional[int] = None) -> List[Coord]:

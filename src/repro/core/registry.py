@@ -39,10 +39,16 @@ class Registry:
         # so a restarted gateway rehydrates the paper's per-user
         # configuration instead of forgetting every session
         self._sessions: Dict = {}
+        # federation pod directory, persisted under the reserved "_pods"
+        # key so a restarted daemon re-attaches runtime pods (devices are
+        # rebuilt on attach — only the directory state round-trips)
+        self._pods: List = []
         if state_path and os.path.exists(state_path):
             try:
                 with open(state_path) as f:
-                    self._sessions = json.load(f).get("_sessions", {}) or {}
+                    snap = json.load(f)
+                self._sessions = snap.get("_sessions", {}) or {}
+                self._pods = snap.get("_pods", []) or []
             except (OSError, ValueError):
                 pass     # a corrupt snapshot must not block daemon boot
 
@@ -57,6 +63,19 @@ class Registry:
         registry snapshot write."""
         with self._lock:
             self._sessions = dict(sessions)
+            self._persist()
+
+    # ----------------------------------------------------------------- pods
+    def pods_snapshot(self) -> List:
+        """Deep copy of the stored federation pod directory."""
+        with self._lock:
+            return json.loads(json.dumps(self._pods, default=str))
+
+    def store_pods(self, pods: List) -> None:
+        """Replace the federation pod directory and persist it with the
+        next registry snapshot write."""
+        with self._lock:
+            self._pods = list(pods)
             self._persist()
 
     def _emit(self, app_id: str, note: str = "",
@@ -204,8 +223,10 @@ class Registry:
     def _persist(self) -> None:
         if not self.state_path:
             return
-        # "_sessions" cannot collide with app ids (always "app_NNNN")
+        # "_sessions"/"_pods" cannot collide with app ids (always "app_NNNN")
         snap: Dict = {"_sessions": self._sessions} if self._sessions else {}
+        if self._pods:
+            snap["_pods"] = self._pods
         for app_id, blk in self.apps.items():
             snap[app_id] = {
                 "user": blk.request.user,

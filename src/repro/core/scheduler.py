@@ -588,7 +588,7 @@ class BlockScheduler:
             self.ctl.bus.publish(
                 "utilization", now=now,
                 used_chips=sum(held.values()),
-                total_chips=self.ctl.topo.n_chips)
+                total_chips=self.ctl.total_chips())
         return admitted
 
     # ----------------------------------------------------------- preemption

@@ -73,10 +73,12 @@ class _Drive:
     block_id: Optional[str] = None
     n_chips: int = 0
     priority: int = 0
+    pod: Optional[int] = None             # grant's federation pod
     deficit: float = 0.0                  # PacingPolicy credit
     allowance: float = 1.0                # token bucket (rate cap)
     last_refill: Optional[float] = None
     steps_driven: int = 0
+    derived_rate_hz: Optional[float] = None  # adaptive (budget-derived) cap
 
 
 class AutostepEngine:
@@ -159,6 +161,7 @@ class AutostepEngine:
         if drive is None:
             return None
         return {"enabled": True, "steps_driven": drive.steps_driven,
+                "derived_rate_hz": drive.derived_rate_hz,
                 **drive.config.to_dict()}
 
     # ------------------------------------------------------------- driving
@@ -166,6 +169,8 @@ class AutostepEngine:
         if blk.grant is not None:
             drive.block_id = blk.grant.block_id
             drive.n_chips = blk.grant.n_chips
+            if blk.grant.coords:
+                drive.pod = blk.grant.coords[0][0]
         drive.priority = blk.request.priority
 
     def _publish_step(self, app_id: str, drive: _Drive, rec: Dict,
@@ -258,23 +263,57 @@ class AutostepEngine:
         self._harvest_generate(app_id, drive, rt, now)
         return len(recs)
 
+    def _pod_budget_shares(self) -> Dict[int, float]:
+        """Per-pod power budget split evenly across that pod's runnable
+        engine-driven blocks: pod_id -> chips-per-block share.  Pods
+        without a declared ``power_budget_chips`` are absent (uncapped)."""
+        reg = self.ctl.registry
+        counts: Dict[int, int] = {}
+        for app_id in self._drives:
+            blk = reg.apps.get(app_id)
+            if blk is None or blk.state is not BlockState.RUNNING or \
+                    blk.grant is None or not blk.grant.coords:
+                continue
+            rt = self.ctl.runtimes.get(app_id)
+            if rt is None or getattr(rt, "suspended", False):
+                continue
+            pid = blk.grant.coords[0][0]
+            counts[pid] = counts.get(pid, 0) + 1
+        shares: Dict[int, float] = {}
+        pods = getattr(self.ctl, "pods", None)
+        if pods is None:
+            return shares
+        for pid, n in counts.items():
+            p = pods.get(pid)
+            if p is not None and p.power_budget_chips is not None:
+                shares[pid] = p.power_budget_chips / n
+        return shares
+
     @runtime_check.guard_serialized("control-plane")
     def run_round(self, now: Optional[float] = None,
-                  budget: Optional[int] = None) -> int:
+                  budget: Optional[int] = None,
+                  pod: Optional[int] = None) -> int:
         """One engine round: harvest, checkpoint, terminate, dispatch.
         Returns the number of completions harvested plus dispatches made
         (0 = nothing to do).  Callers serialize rounds with every other
         mutation (the daemon runs them on the pump thread / under its
-        inline lock)."""
+        inline lock).
+
+        ``pod`` restricts harvesting/dispatch to blocks granted on that
+        federation pod — each per-pod daemon worker drives only its own
+        residents, so one slow pod cannot stall another's pump.  Drive
+        cleanup (vanished/terminal blocks) always runs unfiltered."""
         if not self._drives:
             self.last_round_busy = False
             return 0
         t = now if now is not None else time.time()
         reg = self.ctl.registry
+        shares = self._pod_budget_shares()
         work = 0
         pending = 0
         views: List[BlockView] = []
         runnable: Dict[str, object] = {}
+        rated: set = set()       # blocks whose dispatches burn allowance
         for app_id in list(self._drives):
             drive = self._drives[app_id]
             blk = reg.apps.get(app_id)
@@ -291,6 +330,8 @@ class AutostepEngine:
             if rt is None or getattr(rt, "suspended", False):
                 continue
             self._refresh_grant(drive, blk)
+            if pod is not None and drive.pod != pod:
+                continue             # another pod's worker drives this one
             for rec in rt.poll(block=False):
                 self._publish_step(app_id, drive, rec, now)
                 work += 1
@@ -329,9 +370,22 @@ class AutostepEngine:
                            - rt.inflight_depth)
             # `is not None`, not truthiness: max_rate_hz=0.0 is a *pause*
             # (same falsy-zero class as the model-time fixes in PR 3)
-            rate = (cfg.max_rate_hz if cfg.max_rate_hz is not None
-                    else self.policy.default_rate_hz)
+            rate = cfg.max_rate_hz
+            drive.derived_rate_hz = None
+            if rate is None and drive.pod in shares:
+                # adaptive pacing: the pod's power budget (chip-seconds
+                # per second) split across its runnable blocks, converted
+                # to a step rate with the online-learned step cost.  No
+                # estimate yet -> uncapped warm-up until steps land.
+                step_s = self.ctl.monitor.step_time_estimate(drive.block_id)
+                if step_s:
+                    rate = shares[drive.pod] / (step_s
+                                                * max(1, drive.n_chips))
+                    drive.derived_rate_hz = rate
+            if rate is None:
+                rate = self.policy.default_rate_hz
             if rate is not None:
+                rated.add(app_id)
                 if rate <= 0:
                     room = 0                 # paused, stays armed
                 else:
@@ -357,8 +411,7 @@ class AutostepEngine:
         for app_id in plan:
             runnable[app_id].dispatch()
             drive = self._drives[app_id]
-            if drive.config.max_rate_hz is not None or \
-                    self.policy.default_rate_hz is not None:
+            if app_id in rated:
                 drive.allowance -= 1.0
             work += 1
             pending += 1

@@ -23,6 +23,11 @@ Routes (all JSON in/out, ``Authorization: Bearer <session token>``):
   ``POST /v1/blocks/<id>/expire``    owner/admin: end the usage period
   ``GET  /v1/blocks``                my blocks (admin: everyone's)
   ``GET  /v1/cluster``               pod inventory + monitor reports
+  ``GET  /v1/pods``                  federation pod directory
+  ``POST /v1/pods``                  admin: attach a pod at runtime
+  ``POST /v1/pods/<id>/drain``       admin: stop placing on a pod
+  ``POST /v1/pods/<id>/detach``      admin: remove a pod (``force`` evicts)
+  ``POST /v1/pods/<id>/heartbeat``   pod agent liveness beat
   ``GET  /v1/events``                admin: global event feed (long-poll)
   ``GET  /v1/events/stream``         admin: cluster-wide SSE stream
   ``GET  /v1/profile``               who am I / my session configuration
@@ -230,6 +235,12 @@ class GatewayApi:
             ("GET", r"^/v1/profile$", "profile"),
             ("GET", r"^/v1/profile/cursors$", "profile_cursors"),
             ("GET", r"^/v1/cluster$", "cluster"),
+            ("GET", r"^/v1/pods$", "pods"),
+            ("POST", r"^/v1/pods$", "attach_pod"),
+            ("POST", r"^/v1/pods/(?P<pod_id>\d+)/drain$", "drain_pod"),
+            ("POST", r"^/v1/pods/(?P<pod_id>\d+)/detach$", "detach_pod"),
+            ("POST", r"^/v1/pods/(?P<pod_id>\d+)/heartbeat$",
+             "pod_heartbeat"),
             ("POST", r"^/v1/register$", "register"),
             ("POST", r"^/v1/submit$", "submit"),
             ("POST", r"^/v1/gangs$", "submit_gang"),
@@ -455,6 +466,59 @@ class GatewayApi:
 
     def cluster(self, profile, path_args, body, query):
         return 200, self.daemon.cluster_report()
+
+    # ------------------------------------------------------------ federation
+    def pods(self, profile, path_args, body, query):
+        return 200, {"pods": self.daemon.list_pods()}
+
+    def attach_pod(self, profile, path_args, body, query):
+        auth.require_admin(profile)
+        try:
+            pod_x = int(body["pod_x"])
+            pod_y = int(body["pod_y"])
+        except (KeyError, TypeError, ValueError):
+            raise ApiError(400, "attach needs integer pod_x and pod_y")
+        if not (1 <= pod_x <= 64 and 1 <= pod_y <= 64):
+            raise ApiError(400, "pod_x/pod_y must be in [1, 64]")
+        budget = body.get("power_budget_chips")
+        try:
+            budget = None if budget is None else float(budget)
+        except (TypeError, ValueError):
+            raise ApiError(400, "bad power_budget_chips")
+        name = body.get("name")
+        pod = self.daemon.attach_pod(
+            pod_x, pod_y, name=(None if name is None else str(name)),
+            power_budget_chips=budget)
+        return 201, {"pod": pod}
+
+    def _pod_id(self, path_args) -> int:
+        return int(path_args["pod_id"])
+
+    def drain_pod(self, profile, path_args, body, query):
+        auth.require_admin(profile)
+        pid = self._pod_id(path_args)
+        try:
+            return 200, {"pod": self.daemon.drain_pod(pid)}
+        except KeyError:
+            raise ApiError(404, f"unknown pod {pid}")
+
+    def detach_pod(self, profile, path_args, body, query):
+        auth.require_admin(profile)
+        pid = self._pod_id(path_args)
+        try:
+            # residents + no force -> ValueError -> 409 via the router
+            return 200, self.daemon.detach_pod(
+                pid, force=bool(body.get("force", False)))
+        except KeyError:
+            raise ApiError(404, f"unknown pod {pid}")
+
+    def pod_heartbeat(self, profile, path_args, body, query):
+        auth.require_admin(profile)
+        pid = self._pod_id(path_args)
+        try:
+            return 200, {"pod": self.daemon.pod_heartbeat(pid)}
+        except KeyError:
+            raise ApiError(404, f"unknown pod {pid}")
 
     def _submission_kwargs(self, profile: UserProfile, body: Dict) -> Dict:
         """Merge the request with the user's profile defaults.  All values

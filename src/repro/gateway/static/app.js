@@ -49,6 +49,14 @@ function renderCluster(rep) {
   $("dl-misses").textContent = rep.deadlines.deadline_misses;
   $("preempted").textContent = rep.preemption.preempted_total;
   $("resumed").textContent = rep.preemption.resumed_total;
+  const pods = rep.pods || [];
+  const live = pods.filter((p) => p.phase !== "dead");
+  $("pods-live").textContent = live.length;
+  $("migrations").textContent =
+    rep.federation ? rep.federation.migrated_total : 0;
+  $("pods-detail").textContent = pods.map(
+    (p) => p.name + " " + p.free_chips + "/" + p.n_chips +
+           (p.phase !== "ready" ? " (" + p.phase + ")" : "")).join(" · ");
 }
 
 function fmtDeadline(b) {
@@ -68,6 +76,7 @@ function blockRow(b) {
     [b.user],
     ["<span class=state data-tone=" + (TONES[b.state] || "") + ">" +
      b.state + "</span>"],
+    [b.pod == null ? "—" : "pod " + b.pod],
     [b.n_chips, "num"],
     [b.steps, "num"],
     [b.priority, "num"],
@@ -142,6 +151,9 @@ function logEvent(ev) {
     ev.kind === "step" ? (ev.step_s * 1000).toFixed(1) + "ms" : null,
     ev.kind === "utilization"
       ? Math.round(100 * ev.used_chips / ev.total_chips) + "%" : null,
+    ev.kind === "pod" ? "pod " + ev.pod + " (" + ev.name + ")" : null,
+    ev.kind === "migrated"
+      ? "pod " + ev.from_pod + " → pod " + ev.to_pod : null,
   ].filter(Boolean).join(" · ");
   li.append(seq, kind, detail);
   log.prepend(li);
@@ -159,7 +171,8 @@ function openStream(path) {
   es.onmessage = null;      // typed events only (event: <kind>)
   for (const kind of ["state", "admitted", "enqueued", "dequeued",
                       "preempted", "resumed", "registered", "autostep",
-                      "step", "utilization", "session", "generate"]) {
+                      "step", "utilization", "session", "generate",
+                      "pod", "migrated"]) {
     es.addEventListener(kind, (msg) => {
       const ev = JSON.parse(msg.data);
       if (ev.kind !== "step" && ev.kind !== "utilization") refreshSoon();

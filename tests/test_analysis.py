@@ -119,7 +119,7 @@ def test_describe_reports_learned_model(capsys):
     assert set(model["events"]["kinds"]) == {
         "registered", "state", "enqueued", "dequeued", "admitted",
         "preempted", "resumed", "step", "utilization", "autostep",
-        "session", "generate"}
+        "session", "generate", "pod", "migrated"}
 
 
 # ------------------------------------------------------ lifecycle properties

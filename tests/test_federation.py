@@ -1,0 +1,300 @@
+"""Elastic multi-pod federation: runtime attach/drain/detach, heartbeat
+health decay with a false-positive grace period, cross-pod migration of
+queued/preempted/granted blocks, gang no-split placement, pod-state
+snapshot round-trip, per-pod engine rounds and budget-derived pacing."""
+import jax
+import pytest
+
+from repro.core.block import BlockState
+from repro.core.controller import ClusterController
+from repro.core.partition import AllocationError
+from repro.core.scheduler import SimRuntime
+from repro.core.topology import Topology
+from repro.engine import AutostepEngine
+from repro.federation import (FederatedPlacer, HealthMonitor, PodRegistry,
+                              POD_DEAD, POD_DEGRADED, POD_READY)
+
+
+def make_ctl(tmp_path, pod_x=2, pod_y=2, state=False, placer=None):
+    topo = Topology(n_pods=1, pod_x=pod_x, pod_y=pod_y)
+    dev = jax.devices()[0]
+    return ClusterController(
+        topo, devices=[dev] * topo.n_chips,
+        ckpt_root=str(tmp_path / "ckpt"),
+        state_path=str(tmp_path / "state.json") if state else None,
+        placer=placer)
+
+
+def submit_running(ctl, user, n_chips, pod=None, step_s=0.001):
+    app_id, grant = ctl.submit(user, f"{user} job", n_chips, pod=pod)
+    assert grant is not None, f"{user} did not fit"
+    ctl.confirm(app_id, grant.token)
+    ctl.registry.set_state(app_id, BlockState.ACTIVE)
+    ctl.registry.set_state(app_id, BlockState.RUNNING)
+    ctl.runtimes[app_id] = SimRuntime(step_s)
+    return app_id
+
+
+def held_pods(ctl, app_id):
+    coords = ctl.registry.get(app_id).grant.coords
+    return {c[0] for c in coords}
+
+
+# ------------------------------------------------------- join/leave/fail
+
+def test_attach_grows_capacity_and_publishes(tmp_path):
+    ctl = make_ctl(tmp_path)                               # boot: 4 chips
+    assert ctl.total_chips() == 4
+    pod = ctl.attach_pod(2, 2, name="edge")
+    assert pod["phase"] == POD_READY and pod["n_chips"] == 4
+    assert ctl.total_chips() == 8
+    assert ctl.partitioner.free_capacity() == 8
+    evs = [e for e in ctl.bus.events_since(0) if e.kind == "pod"]
+    assert [e.payload["action"] for e in evs][-1] == "joined"
+    assert evs[-1].payload["name"] == "edge"
+
+
+def test_drain_stops_placement_residents_keep_running(tmp_path):
+    ctl = make_ctl(tmp_path)
+    pod = ctl.attach_pod(2, 2, name="edge")
+    app = submit_running(ctl, "alice", 4, pod=pod["pod_id"])
+    ctl.drain_pod(pod["pod_id"])
+    assert ctl.pods.pod(pod["pod_id"]).phase == "draining"
+    # resident untouched, but the drained pod takes nothing new
+    assert ctl.registry.get(app).state == BlockState.RUNNING
+    _, grant = ctl.submit("bob", "job", 2)
+    assert grant is not None and held_pods(ctl, _) == {0}
+
+
+def test_detach_refuses_residents_then_force_migrates(tmp_path):
+    ctl = make_ctl(tmp_path)
+    pod = ctl.attach_pod(2, 2, name="edge")
+    app, grant = ctl.submit("alice", "job", 2, pod=pod["pod_id"])
+    assert grant is not None and held_pods(ctl, app) == {pod["pod_id"]}
+    with pytest.raises(ValueError, match="resident"):
+        ctl.detach_pod(pod["pod_id"])
+    ctl.detach_pod(pod["pod_id"], force=True)
+    # the APPROVED block's grant migrated onto the surviving boot pod
+    assert held_pods(ctl, app) == {0}
+    assert ctl.registry.get(app).state == BlockState.APPROVED
+    assert ctl.pods.get(pod["pod_id"]) is None
+    ctl.partitioner.check_invariants()
+    migs = [e for e in ctl.bus.events_since(0) if e.kind == "migrated"]
+    assert migs and migs[-1].payload["from_pod"] == pod["pod_id"]
+    assert migs[-1].payload["to_pod"] == 0
+
+
+def test_pod_death_mid_dispatch_zero_leaks_and_auto_resume(tmp_path):
+    """Acceptance: kill a pod while a resident has steps in flight —
+    no chip stays owned on the dead pod, the victim is preempted and
+    auto-resumed on surviving capacity, co-tenants are untouched."""
+    ctl = make_ctl(tmp_path)                               # boot 2x2
+    pod = ctl.attach_pod(2, 2, name="edge")
+    # both unpinned: the placer's most-free-first order sends alice to
+    # the boot pod (tie -> lowest id) and bob to the emptier new pod
+    a = submit_running(ctl, "alice", 2)                    # survivor
+    b = submit_running(ctl, "bob", 2)                      # victim
+    assert held_pods(ctl, b) == {pod["pod_id"]}
+    ctl.runtimes[b].dispatch()                             # mid-dispatch
+    victims = ctl.fail_pod(pod["pod_id"], reason="power loss")
+    assert victims == [b]
+    dead = ctl.pods.pod(pod["pod_id"])
+    assert dead.phase == POD_DEAD
+    assert all(info.owner is None
+               for info in dead.part.chips.values())   # zero leaked chips
+    ctl.partitioner.check_invariants()
+    # blast radius confined: the co-tenant never moved
+    assert ctl.registry.get(a).state == BlockState.RUNNING
+    assert held_pods(ctl, a) == {0}
+    # victim auto-resumed onto the surviving pod by the post-failure pump
+    blk_b = ctl.registry.get(b)
+    assert blk_b.state == BlockState.RUNNING
+    assert held_pods(ctl, b) == {0}
+    assert blk_b.preempt_count == 1
+
+
+# ----------------------------------------------------- elastic admission
+
+def test_queued_block_admitted_on_runtime_attach(tmp_path):
+    ctl = make_ctl(tmp_path)                               # 4 chips total
+    submit_running(ctl, "alice", 4)
+    b, grant = ctl.submit("bob", "job", 4)
+    assert grant is None
+    assert ctl.registry.get(b).state == BlockState.QUEUED
+    ctl.attach_pod(2, 2, name="edge")      # pump runs inside attach_pod
+    blk = ctl.registry.get(b)
+    assert blk.state == BlockState.APPROVED
+    assert held_pods(ctl, b) == {1}
+
+
+def test_preempted_block_migrates_to_new_pod(tmp_path):
+    ctl = make_ctl(tmp_path)
+    a = submit_running(ctl, "alice", 4)
+    ctl.preempt(a, reason="make room")
+    # a higher class outranks the parked victim and refills the boot pod
+    # (a same-class submission would wait its turn behind the victim)
+    app_c, grant_c = ctl.submit("carol", "job", 4, priority=10)
+    assert grant_c is not None
+    assert ctl.registry.get(a).state == BlockState.PREEMPTED
+    ctl.attach_pod(2, 2, name="edge")
+    blk = ctl.registry.get(a)
+    assert blk.state == BlockState.RUNNING          # auto-resumed
+    assert held_pods(ctl, a) == {1}                 # ...on the new pod
+    migs = [e for e in ctl.bus.events_since(0) if e.kind == "migrated"]
+    assert migs and migs[-1].payload["from_pod"] == 0
+    assert migs[-1].payload["to_pod"] == 1
+    assert migs[-1].payload["n_chips"] == 4
+
+
+# ------------------------------------------------------------------ gangs
+
+def test_gang_never_splits_across_pods(tmp_path):
+    ctl = make_ctl(tmp_path)
+    ctl.attach_pod(2, 2, name="edge")
+    # 4+2 chips: fits the 8-chip federation but no single 4-chip pod
+    with pytest.raises(AllocationError, match="no single pod"):
+        ctl.partitioner.allocate_many([(4, "g1", None), (2, "g2", None)])
+    # nothing half-placed by the failed attempt
+    assert ctl.partitioner.free_capacity() == 8
+    ctl.partitioner.check_invariants()
+
+
+def test_gang_split_knob_allows_cross_pod(tmp_path):
+    ctl = make_ctl(tmp_path, placer=FederatedPlacer(allow_gang_split=True))
+    ctl.attach_pod(2, 2, name="edge")
+    placed = ctl.partitioner.allocate_many([(4, "g1", None),
+                                            (2, "g2", None)])
+    pods_used = {c[0] for coords in placed.values() for c in coords}
+    assert pods_used == {0, 1}             # split was required, and allowed
+    ctl.partitioner.check_invariants()
+
+
+# ----------------------------------------------------------------- health
+
+def test_health_grace_period_false_positive_recovers(tmp_path):
+    ctl = make_ctl(tmp_path)
+    pod = ctl.attach_pod(2, 2, name="edge")
+    pid = pod["pod_id"]
+    app = submit_running(ctl, "alice", 2, pod=pid)
+    ctl.pod_heartbeat(pid, now=0.0)        # first beat arms monitoring
+    ctl.tick(now=6.0)                      # past degraded_after_s=5
+    assert ctl.pods.pod(pid).phase == POD_DEGRADED
+    # degraded is a grace state: nothing was evicted
+    assert ctl.registry.get(app).state == BlockState.RUNNING
+    ctl.pod_heartbeat(pid, now=7.0)        # late beat clears the flap
+    assert ctl.pods.pod(pid).phase == POD_READY
+    # silence past dead_after_s=15 since the last beat kills the pod
+    ctl.tick(now=23.0)
+    assert ctl.pods.pod(pid).phase == POD_DEAD
+    assert ctl.registry.get(app).state != BlockState.RUNNING
+
+
+def test_pods_that_never_beat_are_exempt_from_decay(tmp_path):
+    ctl = make_ctl(tmp_path)
+    ctl.attach_pod(2, 2, name="sim")
+    ctl.tick(now=1e9)
+    assert all(p.phase == POD_READY for p in ctl.pods.pods())
+
+
+def test_health_monitor_unit_transitions():
+    reg = PodRegistry()
+    pod = reg.attach(2, 2, [object()] * 4, name="p")
+    mon = HealthMonitor(reg, degraded_after_s=1.0, dead_after_s=3.0)
+    mon.beat(pod.pod_id, now=0.0)
+    assert mon.check(now=0.5) == []
+    assert pod.phase == POD_READY
+    assert mon.check(now=2.0) == []
+    assert pod.phase == POD_DEGRADED
+    assert mon.check(now=3.5) == [pod.pod_id]
+    assert pod.phase == POD_DEAD
+    assert mon.check(now=9.0) == []        # dead pods report only once
+
+
+# -------------------------------------------------------------- snapshot
+
+def test_pod_directory_snapshot_roundtrip(tmp_path):
+    ctl = make_ctl(tmp_path, state=True)
+    pod = ctl.attach_pod(2, 1, name="edge", power_budget_chips=3.0)
+    ctl.drain_pod(pod["pod_id"])
+    ctl2 = make_ctl(tmp_path, state=True)
+    back = ctl2.pods.pod(pod["pod_id"])
+    assert back.name == "edge"
+    assert back.phase == "draining"
+    assert back.power_budget_chips == 3.0
+    assert (back.topo.pod_x, back.topo.pod_y) == (2, 1)
+    assert not back.boot
+    # boot pod rebuilt from the topology, not duplicated from the snapshot
+    assert [p.pod_id for p in ctl2.pods.pods()] == [0, pod["pod_id"]]
+    assert ctl2.total_chips() == 4 + 2
+
+
+# ----------------------------------------------------- per-pod engine
+
+def test_engine_round_pod_filter(tmp_path):
+    ctl = make_ctl(tmp_path)
+    pod = ctl.attach_pod(2, 2, name="edge")
+    engine = AutostepEngine(ctl)
+    ctl.engine = engine
+    a = submit_running(ctl, "alice", 2, pod=0, step_s=0.0)
+    b = submit_running(ctl, "bob", 2, pod=pod["pod_id"], step_s=0.0)
+    engine.enable(a)
+    engine.enable(b)
+    engine.run_round(now=0.0, pod=0)
+    assert ctl.runtimes[a].inflight_depth > 0      # pod 0 progressed
+    assert ctl.runtimes[b].inflight_depth == 0     # pod 1 untouched
+    engine.run_round(now=0.0, pod=pod["pod_id"])
+    assert ctl.runtimes[b].inflight_depth > 0
+
+
+def test_adaptive_pacing_derives_rate_from_pod_budget(tmp_path):
+    ctl = make_ctl(tmp_path)
+    pod = ctl.attach_pod(2, 2, name="edge", power_budget_chips=2.0)
+    engine = AutostepEngine(ctl)
+    ctl.engine = engine
+    app = submit_running(ctl, "alice", 4, pod=pod["pod_id"], step_s=0.0)
+    blk = ctl.registry.get(app)
+    engine.enable(app)
+    # before any step cost is learned: uncapped warm-up
+    engine.run_round(now=0.0)
+    assert engine.describe(app)["derived_rate_hz"] is None
+    # teach the monitor a 0.1 s/step cost, then rates derive from it:
+    # (2 budget chips / 1 runnable block) / (0.1 s * 4 chips) = 5 Hz
+    for i in range(8):
+        ctl.bus.publish("step", app_id=app, block_id=blk.block_id,
+                        user="alice", now=float(i), step_s=0.1, n_chips=4)
+    engine.run_round(now=1.0)
+    rate = engine.describe(app)["derived_rate_hz"]
+    est = ctl.monitor.step_time_estimate(blk.block_id)
+    assert est is not None and rate == pytest.approx(2.0 / (est * 4))
+    # an explicit per-block cap still wins over the derived rate
+    engine.set_pace(app, 1.0)
+    engine.run_round(now=2.0)
+    assert engine.describe(app)["derived_rate_hz"] is None
+
+
+# ----------------------------------------------------- placement scoring
+
+def test_interference_penalty_knob():
+    reg = PodRegistry()
+    pod = reg.attach(8, 1, [object()] * 8, name="row")
+    pod.part.allocate(3, "resident", pod=0)        # occupies x=0..2
+    fragmented = [(0, 1, 0), (0, 4, 0)]   # routes through the resident
+    on = FederatedPlacer(interference_penalty=True)
+    off = FederatedPlacer(interference_penalty=False)
+    assert on.rect_penalty(pod, fragmented) > 0.0
+    assert off.rect_penalty(pod, fragmented) == 0.0
+    # a disjoint contiguous rectangle is free under either knob
+    clean = [(0, 5, 0), (0, 6, 0)]
+    assert on.rect_penalty(pod, clean) == 0.0
+
+
+def test_federation_counters(tmp_path):
+    ctl = make_ctl(tmp_path)
+    pod = ctl.attach_pod(2, 2, name="edge")
+    app, _ = ctl.submit("alice", "job", 2, pod=pod["pod_id"])
+    ctl.fail_pod(pod["pod_id"])
+    rep = ctl.monitor.federation_report()
+    assert rep["pods_joined_total"] >= 2           # boot + edge
+    assert rep["pods_lost_total"] == 1
+    assert rep["migrated_total"] == 1              # APPROVED grant moved
+    assert held_pods(ctl, app) == {0}
