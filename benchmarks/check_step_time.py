@@ -1,0 +1,111 @@
+"""CI gate for the step-time floor: model floors + wall-clock trend.
+
+Usage:
+  python benchmarks/check_step_time.py bench-json/BENCH_step_time.json
+  python benchmarks/check_step_time.py --update bench-json/BENCH_step_time.json
+
+Two checks against ``benchmarks/baselines/step_time.json`` (committed):
+
+* **Floors (machine-independent)** — the HBM-bytes model's fused-optimizer
+  speedup must stay >= 1.5x for the int8-state (production 400B-class)
+  path and >= 1.0x for f32 state, and the overlap model must hide > 50% of
+  the exposed gradient-allreduce time.  These are properties of the code,
+  not the host: a refactor that un-fuses the kernel or un-overlaps the
+  allreduce fails CI here.
+* **Trend (10% slack)** — for every measured row (us_per_call > 0) present
+  in both the baseline and the new run, compute new/old; the gate fails if
+  the *median* ratio exceeds 1.10.  Median-of-ratios tolerates one noisy
+  row on a shared CI host; a real step-time regression moves them all.
+
+``--update`` rewrites the baseline from the given run (commit the result).
+"""
+import json
+import os
+import statistics
+import sys
+
+BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "baselines", "step_time.json")
+
+FLOORS = [
+    # (row name, minimum derived value, what it proves)
+    ("opt_hbm_model_i8_speedup_model", 1.5,
+     "fused AdamW >= 1.5x over composed reference (int8 state, HBM model)"),
+    ("opt_hbm_model_f32_speedup_model", 1.0,
+     "fused AdamW never loses HBM traffic vs reference (f32 state)"),
+    ("overlap_hidden_frac_model", 0.5,
+     "overlapped allreduce hides > 50% of exposed comm (model)"),
+]
+
+
+def rows_by_name(doc):
+    return {r["name"]: r for r in doc.get("rows", [])}
+
+
+def main(argv=None):
+    argv = list(sys.argv[1:] if argv is None else argv)
+    update = "--update" in argv
+    if update:
+        argv.remove("--update")
+    if len(argv) != 1:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    with open(argv[0]) as f:
+        new = json.load(f)
+    if not new.get("ok", False):
+        print(f"FAIL: benchmark run itself failed ({argv[0]})")
+        return 1
+    rows = rows_by_name(new)
+
+    rc = 0
+    for name, floor, what in FLOORS:
+        row = rows.get(name)
+        if row is None:
+            print(f"FAIL: missing floor row {name}")
+            rc = 1
+            continue
+        val = float(row["derived"])
+        status = "ok" if val >= floor else "FAIL"
+        if val < floor:
+            rc = 1
+        print(f"{status}: {name} = {val:.3f} (floor {floor}) — {what}")
+
+    if update:
+        os.makedirs(os.path.dirname(BASELINE), exist_ok=True)
+        with open(BASELINE, "w") as f:
+            json.dump(new, f, indent=1)
+        print(f"baseline updated: {BASELINE}")
+        return rc
+
+    if not os.path.exists(BASELINE):
+        print(f"no committed baseline at {BASELINE}; floors only")
+        return rc
+    with open(BASELINE) as f:
+        base = rows_by_name(json.load(f))
+    ratios = []
+    for name, row in rows.items():
+        old = base.get(name)
+        if old is None:
+            continue
+        try:
+            t_new, t_old = float(row["us_per_call"]), float(old["us_per_call"])
+        except ValueError:
+            continue
+        if t_new > 0 and t_old > 0:
+            ratios.append((name, t_new / t_old))
+    if not ratios:
+        print("no comparable measured rows; trend check skipped")
+        return rc
+    med = statistics.median(r for _, r in ratios)
+    for name, r in sorted(ratios):
+        print(f"trend: {name} {r:.3f}x baseline")
+    if med > 1.10:
+        print(f"FAIL: median step-time ratio {med:.3f}x > 1.10x baseline")
+        rc = 1
+    else:
+        print(f"ok: median step-time ratio {med:.3f}x <= 1.10x baseline")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -103,8 +103,10 @@ SECTIONS = [
      "bisection.py", 8),
     ("multiblock_overhead", "multi-block overhead on tenant train jobs",
      "multiblock_overhead.py", 8),
-    ("roofline_report", "roofline table (from dry-run artifacts)",
+    ("roofline", "roofline table (from dry-run artifacts)",
      "roofline_report.py", 1),
+    ("step_time", "step-time floor: fused optimizer + overlapped allreduce",
+     "step_time.py", 1),
     ("scheduler_throughput", "scheduler: event-driven dispatch vs round-robin",
      "scheduler_throughput.py", 1),
     ("preemption_latency", "scheduler: preemptive admission vs wait-for-expiry",

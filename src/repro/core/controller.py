@@ -51,6 +51,7 @@ from repro.core.topology import Coord, Topology
 from repro.federation import (FederatedPartitioner, FederatedPlacer,
                               HealthMonitor, PodRegistry)
 from repro.federation.pods import POD_DEAD, POD_READY, to_local
+from repro.train import compile_cache
 
 # lifecycle states that hold chips (a PREEMPTED block holds nothing)
 _HOLDING = (BlockState.APPROVED, BlockState.CONFIRMED, BlockState.ACTIVE,
@@ -76,6 +77,9 @@ class ClusterController:
         self.bus = bus or EventBus()
         self.monitor = Monitor()
         self.monitor.subscribe_to(self.bus)
+        # compile-cache hit/miss events flow onto this controller's bus
+        # (process-wide cache: reuse spans every block the host runs)
+        compile_cache.GLOBAL.set_bus(self.bus)
         # the boot topology is carved into one federation pod per paper pod
         # (pod p owns the matching contiguous device slice, preserving the
         # pre-federation chip_index device mapping); more pods attach and
@@ -280,9 +284,27 @@ class ClusterController:
             devices = self.devices_for(blk.grant.coords)
             rt = BlockRuntime(blk.grant, job, devices, self.ckpt_root)
             rt.init_state()
+            self._attach_roofline(blk, rt)
         self.runtimes[app_id] = rt
         self.registry.set_state(app_id, BlockState.ACTIVE, "runtime built")
         return rt
+
+    def _attach_roofline(self, blk, rt) -> None:
+        """Give the Monitor this block's roofline model (useful FLOPs per
+        step + modeled step-time floor) so its step-time EWMA reads back as
+        achieved-vs-peak utilization.  Re-run on every rebuild: a resume on
+        fewer chips changes the denominator."""
+        job = getattr(rt, "job", None)
+        if job is None or blk.block_id is None:
+            return
+        try:
+            from repro.launch import hlo_analysis
+            self.monitor.set_roofline(
+                blk.block_id,
+                hlo_analysis.block_roofline(job.cfg, job.shape,
+                                            len(blk.grant.coords)))
+        except Exception:
+            pass    # monitoring garnish: never block activation on it
 
     def run(self, app_id: str) -> None:
         self.registry.set_state(app_id, BlockState.RUNNING, "job started")
@@ -385,6 +407,8 @@ class ClusterController:
                 self.partitioner.release(old.block_id)
                 raise
         blk.grant = new_grant
+        if rt is not None:
+            self._attach_roofline(blk, rt)   # chip count may have changed
         self.registry.set_state(
             app_id, BlockState.ACTIVE,
             f"resumed on {n} chips at step "
@@ -686,6 +710,7 @@ class ClusterController:
         rt = BlockRuntime.rebuild(old_rt, new_grant,
                                   self.devices_for(coords), self.ckpt_root)
         self.runtimes[app_id] = rt
+        self._attach_roofline(blk, rt)       # new chip-count denominator
         self.scheduler.pump()   # a shrink may free room for queued blocks
         return rt
 

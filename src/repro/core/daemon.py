@@ -520,6 +520,7 @@ class ClusterDaemon:
             "preempt_count": blk.preempt_count,
             "failure": blk.failure_reason,
             "steps": getattr(rt, "step_count", 0) if rt else 0,
+            "mfu": self.ctl.monitor.mfu(blk.block_id),
             "autostep": self.engine.describe(app_id),
         }
 
@@ -546,6 +547,8 @@ class ClusterDaemon:
             "queue": self.ctl.monitor.queue_report(),
             "deadlines": self.ctl.monitor.deadline_report(),
             "preemption": self.ctl.monitor.preemption_report(),
+            "compile": self.ctl.monitor.compile_report(),
+            "roofline": self.ctl.monitor.roofline_report(),
         }
 
     def events_since(self, after_seq: int = 0,

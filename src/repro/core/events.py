@@ -53,6 +53,8 @@ EVENT_KINDS = (
                     #   checkpoint_step)
     "resumed",      # rebuilt on a fresh grant after preemption
     "step",         # one completed runtime step (payload: step_s, n_chips)
+    "compile",      # a step executable was built or reused from the
+                    #   compile cache (payload: action = hit | miss, label)
     "utilization",  # periodic pod usage sample from the scheduler pump
     "autostep",     # engine opt-in lifecycle (payload: action = enabled |
                     #   disabled | paced | done, plus the drive config)

@@ -20,6 +20,9 @@ class BlockStats:
     step_times: List[float] = dataclasses.field(default_factory=list)
     chip_seconds: float = 0.0
     last_metrics: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # roofline model (set once at runtime attach): model_flops, n_chips,
+    # peak_flops, step_time_s (modeled floor), bottleneck, source
+    roofline: Optional[Dict] = None
 
 
 class Monitor:
@@ -49,6 +52,9 @@ class Monitor:
         self.resumed_total = 0
         self.progress_lost_steps: List[int] = []  # per eviction, pre-save
         self.resume_waits: List[float] = []       # seconds evicted->resumed
+        # compile-cache accounting (CompileCache publishes kind="compile")
+        self.compile_hits_total = 0
+        self.compile_misses_total = 0
         # federation accounting (pod lifecycle + cross-pod migration)
         self.pods_joined_total = 0
         self.pods_lost_total = 0                  # left or died
@@ -98,11 +104,14 @@ class Monitor:
         elif ev.kind == "migrated":
             self.record_migration(ev.app_id, p.get("from_pod"),
                                   p.get("to_pod"))
+        elif ev.kind == "compile":
+            self.record_compile(p.get("action", ""))
 
     def subscribe_to(self, bus) -> None:
         bus.subscribe(self.on_event,
                       kinds={"step", "enqueued", "dequeued", "admitted",
-                             "preempted", "utilization", "pod", "migrated"})
+                             "preempted", "utilization", "pod", "migrated",
+                             "compile"})
 
     def record_step(self, block_id: str, step_s: float, n_chips: int,
                     metrics: Optional[Dict[str, float]] = None) -> None:
@@ -231,6 +240,85 @@ class Monitor:
                 rep[f"p50_wait_p{p}_s"] = statistics.median(ws) if ws else 0.0
             return rep
 
+    # --------------------------------------------------------- compile cache
+    def record_compile(self, action: str) -> None:
+        """A step executable was requested from the compile cache: ``hit``
+        reused a prior build (preemption resume / scheduler rebuild on an
+        identical signature), ``miss`` paid for a fresh XLA compile."""
+        with self._lock:
+            if action == "hit":
+                self.compile_hits_total += 1
+            elif action == "miss":
+                self.compile_misses_total += 1
+
+    def compile_report(self) -> Dict[str, float]:
+        with self._lock:
+            total = self.compile_hits_total + self.compile_misses_total
+            return {
+                "compile_hits_total": self.compile_hits_total,
+                "compile_misses_total": self.compile_misses_total,
+                "compile_hit_rate": (self.compile_hits_total / total
+                                     if total else 0.0),
+            }
+
+    # -------------------------------------------------------------- roofline
+    def set_roofline(self, block_id: str, roofline: Dict) -> None:
+        """Attach the block's roofline model (``launch.hlo_analysis.
+        block_roofline``): useful FLOPs per step, chips, per-chip peak and
+        the modeled step-time floor.  The step-time EWMA then yields
+        achieved-vs-peak utilization without touching the hot path."""
+        with self._lock:
+            self._get(block_id).roofline = dict(roofline)
+
+    def mfu(self, block_id: Optional[str]) -> Optional[float]:
+        """Model FLOPs utilization: useful FLOPs per step / (EWMA step time
+        x chips x per-chip peak).  None until the block has both a roofline
+        model and at least one measured step."""
+        with self._lock:
+            s = self.stats.get(block_id) if block_id else None
+            if s is None or s.roofline is None or not s.ewma_step_s:
+                return None
+            r = s.roofline
+            denom = (s.ewma_step_s * max(1, r.get("n_chips", 1))
+                     * r.get("peak_flops", 0.0))
+            return r.get("model_flops", 0.0) / denom if denom else None
+
+    def roofline_report(self) -> Dict[str, Dict]:
+        """Per-block achieved-vs-modeled performance + the cluster mean.
+
+        ``of_roofline`` compares the measured EWMA to the *modeled* step-
+        time floor (1.0 = running at the roofline); ``mfu`` compares to the
+        raw compute peak.  A block far under its roofline with a healthy
+        queue is the migration/straggler signal with units attached."""
+        with self._lock:
+            blocks: Dict[str, Dict] = {}
+            mfus = []
+            for bid, s in self.stats.items():
+                if s.roofline is None:
+                    continue
+                r = s.roofline
+                ew = s.ewma_step_s
+                peak = r.get("peak_flops", 0.0)
+                chips = max(1, r.get("n_chips", 1))
+                mfu = (r.get("model_flops", 0.0) / (ew * chips * peak)
+                       if ew and peak else None)
+                if mfu is not None:
+                    mfus.append(mfu)
+                blocks[bid] = {
+                    "mfu": mfu,
+                    "ewma_step_s": ew,
+                    "modeled_step_s": r.get("step_time_s"),
+                    "of_roofline": (r["step_time_s"] / ew
+                                    if ew and r.get("step_time_s") else None),
+                    "achieved_flops_s": (r.get("model_flops", 0.0) / ew
+                                         if ew else None),
+                    "bottleneck": r.get("bottleneck"),
+                    "source": r.get("source"),
+                }
+            return {"blocks": blocks,
+                    "mean_mfu": (statistics.mean(mfus) if mfus else 0.0),
+                    "n_modeled": len(blocks)}
+
     # ------------------------------------------------------------ federation
     def record_pod_event(self, action: str) -> None:
         with self._lock:
@@ -333,6 +421,12 @@ class Monitor:
                     "ewma_step_s": s.ewma_step_s,
                     "chip_seconds": round(s.chip_seconds, 3),
                     "last_metrics": s.last_metrics,
+                    "mfu": (s.roofline.get("model_flops", 0.0)
+                            / (s.ewma_step_s
+                               * max(1, s.roofline.get("n_chips", 1))
+                               * s.roofline["peak_flops"])
+                            if s.roofline and s.ewma_step_s
+                            and s.roofline.get("peak_flops") else None),
                 }
                 for bid, s in self.stats.items()
             }

@@ -33,6 +33,7 @@ from repro.models.config import ModelConfig, ShapeConfig
 from repro.serve import serve_step as serve_lib
 from repro.sharding import ctx as shard_ctx
 from repro.sharding import plans
+from repro.train import compile_cache
 from repro.train import optimizer as opt_lib
 from repro.train import train_step as train_lib
 
@@ -112,6 +113,19 @@ class BlockRuntime(InflightWindow):
         self._build()
 
     # ------------------------------------------------------------ compile
+    def _cache_key(self, family: str, *extra) -> tuple:
+        """Logical build signature: everything the jitted step's trace can
+        depend on.  ``seed``/checkpoint fields deliberately excluded — they
+        never reach the compiled computation."""
+        job = self.job
+        return (family, compile_cache.freeze(job.cfg),
+                compile_cache.freeze(job.shape),
+                compile_cache.mesh_fingerprint(self.mesh)) + extra
+
+    def _cached(self, key, builder, label: str):
+        return compile_cache.GLOBAL.get(
+            key, builder, label=label, block_id=self.grant.block_id)
+
     def _build(self) -> None:
         job = self.job
         if job.kind == "train":
@@ -123,16 +137,28 @@ class BlockRuntime(InflightWindow):
             batch_abs = pipeline.input_specs(job.cfg, job.shape)
             b_spec = plans.batch_specs(batch_abs, self.mesh, self.axes)
             self.batch_shardings = plans.to_shardings(b_spec, self.mesh)
-            step = train_lib.make_train_step(job.cfg, job.shape, job.opt)
 
-            def fn(state, batch):
-                with shard_ctx.use(self.ctx):
-                    return step(state, batch)
+            def build_train():
+                # everything the closure captures (ctx, shardings) is a
+                # pure function of the cache key, so a rebuild with the
+                # same key can adopt this wrapper — and jax's own jit
+                # cache makes re-attach on the same chips recompile-free
+                step = train_lib.make_train_step(job.cfg, job.shape, job.opt)
+                ctx, st_sh, b_sh = (self.ctx, self.state_shardings,
+                                    self.batch_shardings)
 
-            self._step = jax.jit(fn, in_shardings=(self.state_shardings,
-                                                   self.batch_shardings),
-                                 out_shardings=(self.state_shardings, None),
-                                 donate_argnums=(0,))
+                def fn(state, batch):
+                    with shard_ctx.use(ctx):
+                        return step(state, batch)
+
+                return jax.jit(fn, in_shardings=(st_sh, b_sh),
+                               out_shardings=(st_sh, None),
+                               donate_argnums=(0,))
+
+            self._step = self._cached(
+                self._cache_key("train_step", compile_cache.freeze(job.opt),
+                                ("donate", 0)),
+                build_train, "train_step")
             self.data = pipeline.DataIterator(job.cfg, job.shape,
                                               seed=job.seed,
                                               shardings=self.batch_shardings)
@@ -148,19 +174,26 @@ class BlockRuntime(InflightWindow):
                 self._prefill_fn = None
                 self._rng = jax.random.PRNGKey(job.seed + 1)
                 return
-            dec = serve_lib.make_decode_step(job.cfg,
-                                             sample=job.decode_sample)
+            def build_decode():
+                dec = serve_lib.make_decode_step(job.cfg,
+                                                 sample=job.decode_sample)
+                ctx = self.ctx
 
-            if job.decode_sample:
-                def fn(params, token, cache, cache_len, key):
-                    with shard_ctx.use(self.ctx):
-                        return dec(params, token, cache, cache_len, key)
-            else:
-                def fn(params, token, cache, cache_len):
-                    with shard_ctx.use(self.ctx):
-                        return dec(params, token, cache, cache_len)
+                if job.decode_sample:
+                    def fn(params, token, cache, cache_len, key):
+                        with shard_ctx.use(ctx):
+                            return dec(params, token, cache, cache_len, key)
+                else:
+                    def fn(params, token, cache, cache_len):
+                        with shard_ctx.use(ctx):
+                            return dec(params, token, cache, cache_len)
 
-            self._step = jax.jit(fn, donate_argnums=(2,))
+                return jax.jit(fn, donate_argnums=(2,))
+
+            self._step = self._cached(
+                self._cache_key("decode_step", job.decode_sample,
+                                ("donate", 2)),
+                build_decode, "decode_step")
             self._prefill_fn = None   # compiled lazily on first prefill()
             self._rng = jax.random.PRNGKey(job.seed + 1)
 
@@ -210,13 +243,19 @@ class BlockRuntime(InflightWindow):
         it."""
         assert self.job.kind == "serve", "prefill is a serve-block op"
         if self._prefill_fn is None:
-            pf = serve_lib.make_prefill_step(self.job.cfg)
+            def build_prefill():
+                pf = serve_lib.make_prefill_step(self.job.cfg)
+                ctx = self.ctx
 
-            def fn(params, batch, cache):
-                with shard_ctx.use(self.ctx):
-                    return pf(params, batch, cache)
+                def fn(params, batch, cache):
+                    with shard_ctx.use(ctx):
+                        return pf(params, batch, cache)
 
-            self._prefill_fn = jax.jit(fn)
+                return jax.jit(fn)
+
+            self._prefill_fn = self._cached(
+                self._cache_key("prefill_step"), build_prefill,
+                "prefill_step")
         logits, self.cache = self._prefill_fn(self.state["params"], batch,
                                               self.cache)
         self.token = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)

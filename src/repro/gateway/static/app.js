@@ -49,6 +49,17 @@ function renderCluster(rep) {
   $("dl-misses").textContent = rep.deadlines.deadline_misses;
   $("preempted").textContent = rep.preemption.preempted_total;
   $("resumed").textContent = rep.preemption.resumed_total;
+  if (rep.compile) {
+    const c = rep.compile;
+    $("compile-cache").textContent =
+      c.compile_hits_total + "/" +
+      (c.compile_hits_total + c.compile_misses_total) + " (" +
+      Math.round(100 * c.compile_hit_rate) + "%)";
+  }
+  if (rep.roofline) {
+    $("mean-mfu").textContent = rep.roofline.n_modeled
+      ? (100 * rep.roofline.mean_mfu).toFixed(1) + "%" : "—";
+  }
   const pods = rep.pods || [];
   const live = pods.filter((p) => p.phase !== "dead");
   $("pods-live").textContent = live.length;
@@ -79,6 +90,7 @@ function blockRow(b) {
     [b.pod == null ? "—" : "pod " + b.pod],
     [b.n_chips, "num"],
     [b.steps, "num"],
+    [b.mfu == null ? "—" : (100 * b.mfu).toFixed(1) + "%", "num"],
     [b.priority, "num"],
     [fmtDeadline(b)],
     [auto ? "on · " + auto.steps_driven + " steps" +
@@ -171,8 +183,8 @@ function openStream(path) {
   es.onmessage = null;      // typed events only (event: <kind>)
   for (const kind of ["state", "admitted", "enqueued", "dequeued",
                       "preempted", "resumed", "registered", "autostep",
-                      "step", "utilization", "session", "generate",
-                      "pod", "migrated"]) {
+                      "step", "compile", "utilization", "session",
+                      "generate", "pod", "migrated"]) {
     es.addEventListener(kind, (msg) => {
       const ev = JSON.parse(msg.data);
       if (ev.kind !== "step" && ev.kind !== "utilization") refreshSoon();

@@ -1,0 +1,194 @@
+"""Pallas TPU fused AdamW update — one HBM pass per optimizer leaf.
+
+The reference path (``optimizer._adam_leaf`` + ``quantized_state``) lowers
+to ~6 passes over the leaf on the ``state_bits=8`` path: dequantize m,
+dequantize v, the Adam moment/delta arithmetic, the parameter update, and
+one requantize (absmax reduce + scale + round) per moment.  Each pass
+round-trips the leaf through HBM.  This kernel fuses the whole per-leaf
+update — int8 dequantize of m/v -> Adam moment update -> bias-corrected
+delta -> decoupled weight decay -> param cast back to its storage dtype ->
+int8 requantize with fresh per-block absmax scales — into a single read of
+(p, g, m, v) and a single write of (p', m', v'), the memory-bandwidth floor
+for the update.
+
+Layout trick: ``quantized_state`` scales are per 256-element block along
+the last dim, so every leaf is viewed as *rows of quant blocks*: the
+(R, L_pad) row-major leaf is reshaped (free, same bytes) to
+(R * L_pad/256, 256) and the scale tree to (R * nblocks, 1).  The kernel is
+then purely 2-D elementwise with a per-row absmax — no reshapes inside the
+kernel, no lane-dim gymnastics on TPU.
+
+Bit-for-bitness: the kernel replays the exact fp32 op sequence of
+``optimizer._adam_leaf`` (same casts, same constants, same
+``quantize``/``dequantize`` arithmetic, elementwise so reduction order
+never enters except the exact ``max``).  Tests assert ``array_equal``
+against ``_adam_leaf`` evaluated inside an *identical* interpret-mode grid
+harness — XLA:CPU contracts mul+add into FMA differently per compilation
+context, so eager-vs-compiled comparisons are not bitwise stable, but the
+same expression in the same harness is (see tests/test_kernels.py).
+Zero-padding keeps the equivalence: padded g/p/q codes are 0, so padded
+moments stay exactly 0.0 and contribute nothing to any block's absmax —
+identical to the reference, which pads with zeros inside ``quantize``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.train import quantized_state as qs
+
+QBLOCK = qs.BLOCK       # 256 — quantization block = one kernel row
+
+
+def _adam_math(sc_ref, p, g, m_f, v_f, *, b1: float, b2: float, eps: float,
+               weight_decay: float, apply_wd: bool):
+    """The exact ``optimizer._adam_leaf`` fp32 arithmetic (shared by both
+    state formats).  ``sc_ref`` holds (lr, clip_scale, bc1, bc2) in SMEM."""
+    lr, scale, bc1, bc2 = sc_ref[0], sc_ref[1], sc_ref[2], sc_ref[3]
+    g = g.astype(jnp.float32) * scale
+    m_f = b1 * m_f + (1 - b1) * g
+    v_f = b2 * v_f + (1 - b2) * g * g
+    delta = (m_f / bc1) / (jnp.sqrt(v_f / bc2) + eps)
+    if apply_wd:    # decoupled weight decay on matrices only
+        delta = delta + weight_decay * p.astype(jnp.float32)
+    new_p = (p.astype(jnp.float32) - lr * delta)
+    return new_p, m_f, v_f
+
+
+def _requant(x):
+    """Per-row (= per 256-block) absmax int8 quantize — the same ops as
+    ``quantized_state.quantize`` on the rows-of-blocks view."""
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _kernel_f32(sc_ref, p_ref, g_ref, m_ref, v_ref,
+                np_ref, nm_ref, nv_ref, *, b1, b2, eps, weight_decay,
+                apply_wd):
+    new_p, m_f, v_f = _adam_math(
+        sc_ref, p_ref[...], g_ref[...], m_ref[...], v_ref[...],
+        b1=b1, b2=b2, eps=eps, weight_decay=weight_decay, apply_wd=apply_wd)
+    np_ref[...] = new_p.astype(np_ref.dtype)
+    nm_ref[...] = m_f
+    nv_ref[...] = v_f
+
+
+def _kernel_i8(sc_ref, p_ref, g_ref, mq_ref, ms_ref, vq_ref, vs_ref,
+               np_ref, nmq_ref, nms_ref, nvq_ref, nvs_ref, *, b1, b2, eps,
+               weight_decay, apply_wd):
+    # dequantize: same ops as quantized_state.dequantize (codes -> f32 * s)
+    m_f = mq_ref[...].astype(jnp.float32) * ms_ref[...]
+    v_f = vq_ref[...].astype(jnp.float32) * vs_ref[...]
+    new_p, m_f, v_f = _adam_math(
+        sc_ref, p_ref[...], g_ref[...], m_f, v_f,
+        b1=b1, b2=b2, eps=eps, weight_decay=weight_decay, apply_wd=apply_wd)
+    np_ref[...] = new_p.astype(np_ref.dtype)
+    nmq_ref[...], nms_ref[...] = _requant(m_f)
+    nvq_ref[...], nvs_ref[...] = _requant(v_f)
+
+
+def _rows_of_blocks(x, R: int, L: int, Lp: int):
+    """(orig shape) -> zero-padded (R * Lp/QBLOCK, QBLOCK) rows-of-blocks
+    view.  Row-major (R, Lp) and (R*nb, QBLOCK) share a memory layout, so
+    the second reshape is free."""
+    x2 = x.reshape(R, L)
+    if Lp != L:
+        x2 = jnp.pad(x2, ((0, 0), (0, Lp - L)))
+    return x2.reshape(R * (Lp // QBLOCK), QBLOCK)
+
+
+QuantState = Dict[str, jax.Array]
+MomentIn = Union[jax.Array, QuantState]
+
+
+def fused_adamw_update(p, g, m: MomentIn, v: MomentIn, *, lr, scale, bc1,
+                       bc2, b1: float, b2: float, eps: float,
+                       weight_decay: float, apply_wd: bool,
+                       block_rows: int = 256, interpret: bool = False
+                       ) -> Tuple[jax.Array, MomentIn, MomentIn]:
+    """Fused per-leaf AdamW.  ``m``/``v`` are fp32 arrays shaped like ``p``
+    or ``{"q": int8, "s": f32}`` quantized states (``quantized_state``
+    layout); the return matches the input format.  ``apply_wd`` is the
+    *original* leaf's ``ndim >= 2`` — pass it explicitly because the
+    ``scan_stacked`` layer-slice loop hands this function slices whose rank
+    is one lower than the stored leaf."""
+    quantized = isinstance(m, dict)
+    shape = p.shape
+    L = shape[-1] if p.ndim else 1
+    R = int(np.prod(shape[:-1])) if p.ndim > 1 else 1
+    Lp = -(-L // QBLOCK) * QBLOCK
+    nb = Lp // QBLOCK
+    RB = R * nb
+    block_rows = min(block_rows, max(RB, 1))
+    RBp = -(-RB // block_rows) * block_rows
+    grid = (RBp // block_rows,)
+
+    def rows(x):
+        x = _rows_of_blocks(x, R, L, Lp)
+        if RBp != RB:
+            x = jnp.pad(x, ((0, RBp - RB), (0, 0)))
+        return x
+
+    def srows(s):
+        s2 = s.reshape(RB, 1).astype(jnp.float32)
+        if RBp != RB:
+            # padded rows get scale 1.0 (sliced off; avoids 0/0 noise)
+            s2 = jnp.pad(s2, ((0, RBp - RB), (0, 0)), constant_values=1.0)
+        return s2
+
+    scalars = jnp.stack([jnp.asarray(lr, jnp.float32),
+                         jnp.asarray(scale, jnp.float32),
+                         jnp.asarray(bc1, jnp.float32),
+                         jnp.asarray(bc2, jnp.float32)])
+    data_spec = pl.BlockSpec((block_rows, QBLOCK), lambda i: (i, 0))
+    s_spec = pl.BlockSpec((block_rows, 1), lambda i: (i, 0))
+    sc_spec = pl.BlockSpec(memory_space=pltpu.SMEM)
+    kw = dict(b1=b1, b2=b2, eps=eps, weight_decay=weight_decay,
+              apply_wd=apply_wd)
+
+    def unrows(x):
+        return x[:RB].reshape(R, Lp)[:, :L].reshape(shape)
+
+    if not quantized:
+        kernel = functools.partial(_kernel_f32, **kw)
+        out = pl.pallas_call(
+            kernel, grid=grid,
+            in_specs=[sc_spec, data_spec, data_spec, data_spec, data_spec],
+            out_specs=[data_spec, data_spec, data_spec],
+            out_shape=[jax.ShapeDtypeStruct((RBp, QBLOCK), p.dtype),
+                       jax.ShapeDtypeStruct((RBp, QBLOCK), jnp.float32),
+                       jax.ShapeDtypeStruct((RBp, QBLOCK), jnp.float32)],
+            interpret=interpret,
+        )(scalars, rows(p), rows(g), rows(m), rows(v))
+        return unrows(out[0]), unrows(out[1]), unrows(out[2])
+
+    s_shape = (*shape[:-1], nb) if p.ndim else (nb,)
+    kernel = functools.partial(_kernel_i8, **kw)
+    out = pl.pallas_call(
+        kernel, grid=grid,
+        in_specs=[sc_spec, data_spec, data_spec, data_spec, s_spec,
+                  data_spec, s_spec],
+        out_specs=[data_spec, data_spec, s_spec, data_spec, s_spec],
+        out_shape=[jax.ShapeDtypeStruct((RBp, QBLOCK), p.dtype),
+                   jax.ShapeDtypeStruct((RBp, QBLOCK), jnp.int8),
+                   jax.ShapeDtypeStruct((RBp, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((RBp, QBLOCK), jnp.int8),
+                   jax.ShapeDtypeStruct((RBp, 1), jnp.float32)],
+        interpret=interpret,
+    )(scalars, rows(p), rows(g), rows(m["q"]), srows(m["s"]),
+      rows(v["q"]), srows(v["s"]))
+
+    def unscale(s):
+        return s[:RB, 0].reshape(s_shape)
+
+    return (unrows(out[0]),
+            {"q": unrows(out[1]), "s": unscale(out[2])},
+            {"q": unrows(out[3]), "s": unscale(out[4])})

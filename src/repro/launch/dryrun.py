@@ -55,17 +55,7 @@ def _sds(tree_abstract, sharding_tree):
 
 
 def _model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
-    n_active = model_lib.count_active_params(cfg)
-    # exclude the embedding gather (not matmul flops); keep lm_head
-    embed = cfg.vocab_size * cfg.d_model
-    n_eff = max(n_active - embed, 1)
-    if shape.kind == "train":
-        tokens = shape.global_batch * shape.seq_len
-        return 6.0 * n_eff * tokens
-    if shape.kind == "prefill":
-        tokens = shape.global_batch * shape.seq_len
-        return 2.0 * n_eff * tokens
-    return 2.0 * n_eff * shape.global_batch      # decode: one token per seq
+    return hlo_analysis.model_step_flops(cfg, shape)
 
 
 def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,

@@ -142,6 +142,80 @@ class Roofline:
         }
 
 
+def model_step_flops(cfg, shape) -> float:
+    """Analytic useful-FLOPs per step: 6ND for training, 2ND for inference
+    (N = active non-embedding params, D = tokens touched per step).  The
+    numerator of MFU — what the Monitor divides by measured step time."""
+    from repro.models import model as model_lib
+    n_active = model_lib.count_active_params(cfg)
+    # exclude the embedding gather (not matmul flops); keep lm_head
+    n_eff = max(n_active - cfg.vocab_size * cfg.d_model, 1)
+    if shape.kind == "train":
+        return 6.0 * n_eff * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_eff * shape.global_batch * shape.seq_len
+    return 2.0 * n_eff * shape.global_batch      # decode: one token per seq
+
+
+def block_roofline(cfg, shape, n_chips: int) -> Dict:
+    """Roofline model for a live block, for ``Monitor.set_roofline``.
+
+    Prefers the dry-run artifact for this (arch, shape) cell — the full
+    compute/memory/collective model from the compiled HLO — and falls back
+    to the analytic compute-bound floor (model FLOPs / chips x peak) when no
+    sweep has been run, so every block always carries an MFU denominator.
+    """
+    flops = model_step_flops(cfg, shape)
+    out = {"model_flops": flops, "n_chips": int(n_chips),
+           "peak_flops": PEAK_FLOPS, "source": "analytic",
+           "step_time_s": flops / (max(1, n_chips) * PEAK_FLOPS),
+           "bottleneck": "compute"}
+    cell = dryrun_roofline(getattr(cfg, "name", None),
+                           getattr(shape, "name", None))
+    if cell:
+        # per-chip terms from the sweep's mesh scale to this block's size:
+        # step time is per-device under perfect balance, so it carries over
+        out.update({"source": "dryrun",
+                    "step_time_s": cell["step_time_s"],
+                    "bottleneck": cell.get("bottleneck", "compute"),
+                    "model_flops": cell.get("model_flops", flops) or flops})
+    return out
+
+
+def dryrun_roofline(arch: Optional[str],
+                    shape_name: Optional[str]) -> Optional[Dict]:
+    """Look up the dry-run sweep's roofline dict for one cell, or None.
+
+    Reads ``artifacts/dryrun/*.jsonl`` (written by ``repro.launch.dryrun
+    --all --out``; tabulated by ``benchmarks/roofline_report.py``).  Single-
+    pod cells win over multi-pod when both exist."""
+    if not arch or not shape_name:
+        return None
+    import glob as _glob
+    import json as _json
+    import os as _os
+    art = _os.path.join(_os.path.dirname(__file__), "..", "..", "..",
+                        "artifacts", "dryrun")
+    best = None
+    for path in sorted(_glob.glob(_os.path.join(art, "*.jsonl"))):
+        try:
+            with open(path) as f:
+                for line in f:
+                    try:
+                        d = _json.loads(line)
+                    except ValueError:
+                        continue
+                    if (d.get("arch") == arch
+                            and d.get("shape") == shape_name
+                            and d.get("status") == "ok"
+                            and "roofline" in d):
+                        if best is None or d.get("mesh") == "single":
+                            best = d["roofline"]
+        except OSError:
+            continue
+    return best
+
+
 def analyze(compiled, *, n_chips: int, model_flops: float = 0.0) -> Roofline:
     """Roofline terms from a compiled SPMD executable.
 

@@ -182,8 +182,20 @@ class DecodeScheduler:
         self.finished = 0
         self.ttft_s: List[float] = []
 
-        self._decode = jax.jit(self._make_decode(), donate_argnums=(2,))
-        self._admit_fn = jax.jit(self._make_admit(), donate_argnums=(2,))
+        # built through the process-wide compile cache: a scheduler rebuilt
+        # after preemption/re-admission with the same (cfg, sample, paging)
+        # signature adopts the previous wrapper and its compiled buckets
+        # instead of re-tracing every (prompt-bucket, pages) pair from cold
+        from repro.train import compile_cache
+        self._decode = compile_cache.GLOBAL.get(
+            ("paged_decode", compile_cache.freeze(cfg), sample),
+            lambda: jax.jit(self._make_decode(), donate_argnums=(2,)),
+            label="paged_decode")
+        self._admit_fn = compile_cache.GLOBAL.get(
+            ("paged_admit", compile_cache.freeze(cfg), self.page_size,
+             sample),
+            lambda: jax.jit(self._make_admit(), donate_argnums=(2,)),
+            label="paged_admit")
 
     # ------------------------------------------------------------- compiled
     def _make_decode(self):

@@ -16,6 +16,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
 from repro.train import quantized_state as qs
 
 
@@ -33,6 +34,9 @@ class OptConfig:
     state_bits: Optional[int] = None     # None = fp32 moments; 8 = int8
     scan_stacked: bool = True            # lax.map update over layer stacks
     scan_min_ndim: int = 3               # leaves with >= this many dims scan
+    fused: str = "auto"                  # kernels.ops.fused_adamw impl:
+                                         # "auto"/"pallas"/"jnp"; "off" =
+                                         # composed _adam_leaf reference
 
 
 def schedule(cfg: OptConfig, step):
@@ -60,19 +64,39 @@ def global_norm(tree) -> jax.Array:
 
 
 def _adam_leaf(cfg: OptConfig, lr, scale, bc1, bc2, p, g, m, v):
-    """One leaf's update in fp32; m/v enter/leave in storage format."""
+    """One leaf's update in fp32; m/v enter/leave in storage format.
+
+    Reference implementation: ``kernels.ops.fused_adamw`` must reproduce
+    this op sequence bit-for-bit (see tests/test_kernels.py).  The moment
+    format is read off the leaf itself (quantized leaves are {"q","s"}
+    dicts) so fp32 fallbacks for odd leaves stay possible under
+    ``state_bits=8``.
+    """
+    quantized = isinstance(m, dict)
     g = g.astype(jnp.float32) * scale
-    m_f = qs.dequantize(m) if cfg.state_bits == 8 else m
-    v_f = qs.dequantize(v) if cfg.state_bits == 8 else v
+    m_f = qs.dequantize(m) if quantized else m
+    v_f = qs.dequantize(v) if quantized else v
     m_f = cfg.b1 * m_f + (1 - cfg.b1) * g
     v_f = cfg.b2 * v_f + (1 - cfg.b2) * g * g
     delta = (m_f / bc1) / (jnp.sqrt(v_f / bc2) + cfg.eps)
     if p.ndim >= 2:     # decoupled weight decay on matrices only
         delta = delta + cfg.weight_decay * p.astype(jnp.float32)
     new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
-    if cfg.state_bits == 8:
+    if quantized:
         return new_p, qs.quantize(m_f), qs.quantize(v_f)
     return new_p, m_f, v_f
+
+
+def _leaf_update(cfg: OptConfig, lr, scale, bc1, bc2, p, g, m, v):
+    """Dispatch one leaf to the fused kernel (one HBM pass) or the composed
+    reference.  Both are bit-identical on CPU; on TPU ``fused != "off"``
+    routes through the Pallas kernel in ``kernels/fused_adamw.py``."""
+    if cfg.fused == "off":
+        return _adam_leaf(cfg, lr, scale, bc1, bc2, p, g, m, v)
+    return ops.fused_adamw(
+        p, g, m, v, lr=lr, scale=scale, bc1=bc1, bc2=bc2, b1=cfg.b1,
+        b2=cfg.b2, eps=cfg.eps, weight_decay=cfg.weight_decay,
+        impl=cfg.fused)
 
 
 def apply(cfg: OptConfig, params, opt_state, grads
@@ -83,7 +107,7 @@ def apply(cfg: OptConfig, params, opt_state, grads
     scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
     bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
     bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
-    upd = functools.partial(_adam_leaf, cfg, lr, scale, bc1, bc2)
+    upd = functools.partial(_leaf_update, cfg, lr, scale, bc1, bc2)
 
     flat_p, treedef = jax.tree.flatten(params)
     is_state_leaf = (lambda x: isinstance(x, dict) and "q" in x) \

@@ -25,6 +25,9 @@ def _pad_to_block(x):
 
 def quantize(x) -> Dict[str, jax.Array]:
     """x: fp array -> {"q": int8 same shape, "s": f32 (..., nblocks)}."""
+    if x.ndim == 0:     # scalar leaf: one 1-element block, shape preserved
+        st = quantize(x.reshape(1))
+        return {"q": st["q"].reshape(()), "s": st["s"]}
     xf = x.astype(jnp.float32)
     orig_last = xf.shape[-1]
     xp, pad = _pad_to_block(xf)
@@ -39,6 +42,8 @@ def quantize(x) -> Dict[str, jax.Array]:
 
 def dequantize(state: Dict[str, jax.Array]) -> jax.Array:
     q, s = state["q"], state["s"]
+    if q.ndim == 0:
+        return dequantize({"q": q.reshape(1), "s": s}).reshape(())
     orig_last = q.shape[-1]
     qp, pad = _pad_to_block(q.astype(jnp.float32))
     nb = qp.shape[-1] // BLOCK
@@ -50,6 +55,6 @@ def dequantize(state: Dict[str, jax.Array]) -> jax.Array:
 def zeros_like_quantized(p) -> Dict[str, jax.Array]:
     last = p.shape[-1] if p.ndim else 1
     nb = -(-last // BLOCK)
-    shape = p.shape if p.ndim else (1,)
-    return {"q": jnp.zeros(shape, jnp.int8),
-            "s": jnp.ones((*shape[:-1], nb), jnp.float32)}
+    scale_shape = (*p.shape[:-1], nb) if p.ndim else (nb,)
+    return {"q": jnp.zeros(p.shape, jnp.int8),
+            "s": jnp.ones(scale_shape, jnp.float32)}

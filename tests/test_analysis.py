@@ -118,8 +118,8 @@ def test_describe_reports_learned_model(capsys):
     assert model["lifecycle"]["terminal"] == ["DENIED", "EXPIRED"]
     assert set(model["events"]["kinds"]) == {
         "registered", "state", "enqueued", "dequeued", "admitted",
-        "preempted", "resumed", "step", "utilization", "autostep",
-        "session", "generate", "pod", "migrated"}
+        "preempted", "resumed", "step", "compile", "utilization",
+        "autostep", "session", "generate", "pod", "migrated"}
 
 
 # ------------------------------------------------------ lifecycle properties

@@ -188,3 +188,30 @@ def test_monitor_usage_accounting():
     m = Monitor()
     m.record_step("b", 2.0, 8)
     assert m.report()["b"]["chip_seconds"] == pytest.approx(16.0)
+
+
+def test_monitor_roofline_mfu():
+    """MFU = useful FLOPs / (EWMA step time x chips x peak); of_roofline
+    compares the EWMA to the modeled step-time floor."""
+    m = Monitor()
+    assert m.mfu("b") is None                   # no roofline, no steps
+    m.set_roofline("b", {"model_flops": 8e12, "n_chips": 4,
+                         "peak_flops": 1e13, "step_time_s": 0.2,
+                         "bottleneck": "compute", "source": "analytic"})
+    assert m.mfu("b") is None                   # roofline but no steps yet
+    for _ in range(4):
+        m.record_step("b", 0.4, 4)              # EWMA converges to 0.4 s
+    # 8e12 / (0.4 * 4 * 1e13) = 0.5
+    assert m.mfu("b") == pytest.approx(0.5)
+    assert m.report()["b"]["mfu"] == pytest.approx(0.5)
+    rep = m.roofline_report()
+    assert rep["n_modeled"] == 1
+    assert rep["mean_mfu"] == pytest.approx(0.5)
+    blk = rep["blocks"]["b"]
+    assert blk["of_roofline"] == pytest.approx(0.2 / 0.4)
+    assert blk["achieved_flops_s"] == pytest.approx(8e12 / 0.4)
+    assert blk["bottleneck"] == "compute"
+    # a block with a roofline but no steps reports None, not a crash
+    m.set_roofline("idle", {"model_flops": 1.0, "n_chips": 1,
+                            "peak_flops": 1e13})
+    assert m.roofline_report()["blocks"]["idle"]["mfu"] is None

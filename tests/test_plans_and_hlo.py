@@ -145,6 +145,31 @@ def test_hlo_parser_matches_xla_on_scanfree_program():
     assert abs(ours.flops - want) / want < 0.1
 
 
+def test_model_step_flops_and_block_roofline():
+    """Analytic roofline model: 6ND train / 2ND inference FLOPs and a
+    compute-bound step-time floor that scales down with chip count."""
+    from repro.launch import hlo_analysis
+    cfg = C.get_smoke("deepseek_7b")
+    train = C.ShapeConfig("t", "train", seq_len=32, global_batch=4,
+                          microbatch=2)
+    decode = C.ShapeConfig("d", "decode", seq_len=32, global_batch=4)
+    ft = hlo_analysis.model_step_flops(cfg, train)
+    fd = hlo_analysis.model_step_flops(cfg, decode)
+    assert ft > 0 and fd > 0
+    # train touches seq_len x more tokens at 3x the flops per token
+    assert ft == pytest.approx(3 * train.seq_len * fd)
+
+    r4 = hlo_analysis.block_roofline(cfg, train, 4)
+    r8 = hlo_analysis.block_roofline(cfg, train, 8)
+    assert r4["model_flops"] == ft and r4["n_chips"] == 4
+    assert r4["source"] == "analytic" and r4["bottleneck"] == "compute"
+    assert r4["step_time_s"] == pytest.approx(2 * r8["step_time_s"])
+    assert r4["step_time_s"] == pytest.approx(
+        ft / (4 * hlo_analysis.PEAK_FLOPS))
+    # no sweep artifacts for a smoke config: loader returns None, not junk
+    assert hlo_analysis.dryrun_roofline(cfg.name, "no_such_shape") is None
+
+
 def test_dryrun_cell_table_is_complete():
     cells = list(C.all_cells())
     assert len(cells) == 40

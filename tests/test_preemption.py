@@ -356,6 +356,54 @@ def test_suspend_resume_bit_identical_params(tmp_path):
 
 
 @pytest.mark.slow
+def test_resume_is_a_compile_cache_hit(tmp_path):
+    """Resuming on the same chips must NOT recompile: the rebuilt runtime's
+    train step comes out of the compile cache (the first attach was the only
+    miss for that signature), and the Monitor counts the hit."""
+    import repro.configs as C
+    from repro.core.runtime import JobSpec
+    from repro.models.config import ShapeConfig
+    from repro.train import compile_cache
+    from repro.train.optimizer import OptConfig
+
+    compile_cache.GLOBAL.clear()            # process-wide: isolate the test
+    ctl = make_ctl(tmp_path, pod_x=2, pod_y=1)
+    shape = ShapeConfig("t", "train", seq_len=16, global_batch=2,
+                        microbatch=1)
+    job = JobSpec(C.get_smoke("xlstm_350m"), shape,
+                  opt=OptConfig(warmup_steps=1, total_steps=8))
+    a, g = ctl.submit("alice", "train", 1, job=job)
+    ctl.step_all(rounds=2)
+    first = compile_cache.GLOBAL.stats()
+    assert first["misses"] >= 1             # initial attach built the step
+    assert first["hits"] == 0
+
+    ctl.preempt(a, "compile-cache test")
+    ctl.tick()                              # auto-resume on the same chips
+    assert ctl.registry.get(a).state == BlockState.RUNNING
+    after = compile_cache.GLOBAL.stats()
+    assert after["misses"] == first["misses"], "resume recompiled the step"
+    assert after["hits"] >= 1
+    ctl.step_all(rounds=1)                  # reused wrapper still steps
+
+    # the bus carried the events and the Monitor translated them
+    evs = ctl.bus.events_since(kinds={"compile"})
+    actions = [e.payload["action"] for e in evs]
+    assert "miss" in actions and "hit" in actions
+    rep = ctl.monitor.compile_report()
+    assert rep["compile_hits_total"] == after["hits"]
+    assert rep["compile_misses_total"] == after["misses"]
+    assert rep["compile_hit_rate"] > 0
+
+    # the activation also attached the block's roofline model, so the
+    # step-time EWMA reads back as achieved-vs-peak utilization
+    blk = ctl.registry.get(a)
+    assert ctl.monitor.mfu(blk.block_id) is not None
+    roof = ctl.monitor.roofline_report()
+    assert blk.block_id in roof["blocks"] and roof["mean_mfu"] > 0
+
+
+@pytest.mark.slow
 def test_serve_block_suspend_resume_keeps_decode_context(tmp_path):
     """A serve block's KV cache / token / cache_len survive preemption —
     without them a restored decoder would silently restart from an empty

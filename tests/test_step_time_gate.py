@@ -1,0 +1,76 @@
+"""CI step-time gate (benchmarks/check_step_time.py): floor rows must hold,
+the wall-clock trend fails past 10% median regression, and --update rewrites
+the committed baseline."""
+import importlib.util
+import json
+import os
+
+import pytest
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_CHECK = os.path.join(_HERE, "..", "benchmarks", "check_step_time.py")
+
+
+@pytest.fixture()
+def gate(tmp_path, monkeypatch):
+    spec = importlib.util.spec_from_file_location("check_step_time", _CHECK)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    monkeypatch.setattr(mod, "BASELINE", str(tmp_path / "baseline.json"))
+    return mod
+
+
+def doc(tmp_path, name, rows, ok=True):
+    path = tmp_path / name
+    path.write_text(json.dumps(
+        {"section": "step_time", "ok": ok,
+         "rows": [{"name": n, "us_per_call": str(us), "derived": str(d)}
+                  for n, us, d in rows]}))
+    return str(path)
+
+
+GOOD_FLOORS = [
+    ("opt_hbm_model_i8_speedup_model", 0, 5.6),
+    ("opt_hbm_model_f32_speedup_model", 0, 1.3),
+    ("overlap_hidden_frac_model", 0, 1.0),
+]
+
+
+def test_floors_pass_and_update_writes_baseline(gate, tmp_path):
+    rows = GOOD_FLOORS + [("train_step_serial", 1000, 1.0)]
+    path = doc(tmp_path, "run.json", rows)
+    assert gate.main(["--update", path]) == 0
+    assert os.path.exists(gate.BASELINE)
+    # same numbers vs the fresh baseline: trend ratio 1.0, still green
+    assert gate.main([path]) == 0
+
+
+def test_unfused_kernel_fails_the_floor(gate, tmp_path):
+    rows = [("opt_hbm_model_i8_speedup_model", 0, 1.2)] + GOOD_FLOORS[1:]
+    assert gate.main([doc(tmp_path, "bad.json", rows)]) == 1
+
+
+def test_missing_floor_row_fails(gate, tmp_path):
+    assert gate.main([doc(tmp_path, "empty.json", GOOD_FLOORS[1:])]) == 1
+
+
+def test_failed_bench_run_fails(gate, tmp_path):
+    assert gate.main([doc(tmp_path, "crashed.json", GOOD_FLOORS,
+                          ok=False)]) == 1
+
+
+def test_trend_gate_median_regression(gate, tmp_path):
+    base = GOOD_FLOORS + [("train_step_serial", 1000, 1.0),
+                          ("train_step_overlap", 1000, 1.0),
+                          ("opt_apply_i8_fused", 500, 1.0)]
+    assert gate.main(["--update", doc(tmp_path, "base.json", base)]) == 0
+    # one noisy row is tolerated (median of ratios)
+    noisy = GOOD_FLOORS + [("train_step_serial", 2000, 1.0),
+                           ("train_step_overlap", 1010, 1.0),
+                           ("opt_apply_i8_fused", 505, 1.0)]
+    assert gate.main([doc(tmp_path, "noisy.json", noisy)]) == 0
+    # everything 20% slower = real regression
+    slow = GOOD_FLOORS + [("train_step_serial", 1200, 1.0),
+                          ("train_step_overlap", 1200, 1.0),
+                          ("opt_apply_i8_fused", 600, 1.0)]
+    assert gate.main([doc(tmp_path, "slow.json", slow)]) == 1
