@@ -1,0 +1,100 @@
+"""Observability overhead benchmark: the engine-throughput workload run
+with tracing inert vs fully on.
+
+The observability layer promises to be cheap enough to leave enabled in
+production: the metrics bridge and flight recorder are always-on bus
+subscribers, and this benchmark answers whether turning the *tracer* on
+(the only opt-in piece, and the only one on the per-step hot path) costs
+engine throughput.  The workload is the same 4-block inline run as
+engine_throughput.py's client-driven baseline — serial sim step chains,
+no HTTP — so any gap is pure span-recording overhead in the daemon
+dispatch/harvest path.
+
+Acceptance gate (wired into CI via run.py --only obs): tracing-on
+aggregate steps/s within OVERHEAD_BUDGET_PCT of tracing-off.  The script
+exits non-zero past the budget, which run.py turns into ok:false in
+BENCH_obs.json.
+
+Output follows the repo's benchmark CSV convention: name,us_per_call,
+derived.
+
+    PYTHONPATH=src python benchmarks/obs_overhead.py
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.core.daemon import ClusterDaemon
+from repro.core.runtime import SimJobSpec
+from repro.core.topology import Topology
+from repro.obs.flight import RECORDER
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import TRACER
+
+N_BLOCKS = 4
+STEPS = 150
+STEP_S = 0.003
+REPEATS = 3
+OVERHEAD_BUDGET_PCT = 5.0
+
+
+def run_once(trace: bool) -> float:
+    """One inline engine run; returns aggregate steps/s."""
+    # scrub process-global observability state so runs don't see each
+    # other (the tracer especially: a previous trace=True run leaves the
+    # enabled flag set)
+    TRACER.disable()
+    TRACER.reset()
+    REGISTRY.reset()
+    RECORDER.reset()
+    topo = Topology(n_pods=1, pod_x=4, pod_y=4)
+    dev = jax.devices()[0]
+    daemon = ClusterDaemon(topo, devices=[dev] * topo.n_chips,
+                           ckpt_root="artifacts/obs_bench_ckpt",
+                           background=False, trace=trace)
+    apps = []
+    for i in range(N_BLOCKS):
+        app, grant = daemon.submit(f"u{i}", f"obs bench {i}", 4,
+                                   job=SimJobSpec(step_s=STEP_S))
+        assert grant is not None
+        apps.append(app)
+    t0 = time.perf_counter()
+    daemon.run_steps({a: STEPS for a in apps})
+    wall = time.perf_counter() - t0
+    for a in apps:
+        assert daemon.runtime(a).step_count == STEPS
+        daemon.expire(a)
+    if trace:
+        assert TRACER.enabled, "trace=True run must leave the tracer on"
+        n_spans = len(TRACER.spans())
+        assert n_spans > 0, "tracing-on run recorded no spans"
+    daemon.stop()
+    TRACER.disable()
+    return N_BLOCKS * STEPS / wall
+
+
+def best_of(trace: bool) -> float:
+    return max(run_once(trace) for _ in range(REPEATS))
+
+
+def main() -> int:
+    off = best_of(trace=False)
+    on = best_of(trace=True)
+    overhead_pct = max(0.0, (off - on) / off * 100.0)
+    # us_per_call column: mean wall per step, in microseconds
+    print(f"obs_off_steps_per_s,{1e6 / off:.1f},{off:.1f}")
+    print(f"obs_on_steps_per_s,{1e6 / on:.1f},{on:.1f}")
+    print(f"obs_overhead_pct,0,{overhead_pct:.2f}")
+    if overhead_pct > OVERHEAD_BUDGET_PCT:
+        print(f"FAIL: tracing overhead {overhead_pct:.2f}% exceeds "
+              f"{OVERHEAD_BUDGET_PCT:.1f}% budget", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -121,6 +121,8 @@ SECTIONS = [
      "serve_throughput.py", 1),
     ("federation", "federation: pod-ramp time-to-admit + death blast radius",
      "federation_elasticity.py", 1),
+    ("obs", "observability: tracing+metrics overhead on the engine (<=5% gate)",
+     "obs_overhead.py", 1),
 ]
 
 

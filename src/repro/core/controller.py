@@ -51,6 +51,8 @@ from repro.core.topology import Coord, Topology
 from repro.federation import (FederatedPartitioner, FederatedPlacer,
                               HealthMonitor, PodRegistry)
 from repro.federation.pods import POD_DEAD, POD_READY, to_local
+from repro.obs.flight import RECORDER
+from repro.obs.trace import TRACER
 from repro.train import compile_cache
 
 # lifecycle states that hold chips (a PREEMPTED block holds nothing)
@@ -278,16 +280,19 @@ class ClusterController:
         the identical lifecycle without XLA."""
         blk = self.registry.get(app_id)
         assert blk.grant is not None
-        if isinstance(job, SimJobSpec):
-            rt = SimRuntime(job.step_s, ckpt_every=job.ckpt_every)
-        else:
-            devices = self.devices_for(blk.grant.coords)
-            rt = BlockRuntime(blk.grant, job, devices, self.ckpt_root)
-            rt.init_state()
-            self._attach_roofline(blk, rt)
-        self.runtimes[app_id] = rt
-        self.registry.set_state(app_id, BlockState.ACTIVE, "runtime built")
-        return rt
+        with TRACER.span("ctl.activate", cat="ctl", app_id=app_id,
+                         user=blk.request.user):
+            if isinstance(job, SimJobSpec):
+                rt = SimRuntime(job.step_s, ckpt_every=job.ckpt_every)
+            else:
+                devices = self.devices_for(blk.grant.coords)
+                rt = BlockRuntime(blk.grant, job, devices, self.ckpt_root)
+                rt.init_state()
+                self._attach_roofline(blk, rt)
+            self.runtimes[app_id] = rt
+            self.registry.set_state(app_id, BlockState.ACTIVE,
+                                    "runtime built")
+            return rt
 
     def _attach_roofline(self, blk, rt) -> None:
         """Give the Monitor this block's roofline model (useful FLOPs per
@@ -358,6 +363,12 @@ class ClusterController:
             raise ValueError(
                 f"cannot preempt {app_id} in state {blk.state.value}")
         assert blk.grant is not None, f"{app_id} holds no grant"
+        with TRACER.span("ctl.preempt", cat="ctl", app_id=app_id,
+                         user=blk.request.user, reason=reason):
+            self._preempt_body(app_id, blk, reason, now)
+
+    def _preempt_body(self, app_id: str, blk, reason: str,
+                      now: Optional[float]) -> None:
         rt = self.runtimes.get(app_id)
         if self.engine is not None:
             # engine-driven victims: publish the in-flight completions as
@@ -391,6 +402,12 @@ class ClusterController:
         blk = self.registry.get(app_id)
         assert blk.state == BlockState.PREEMPTED, (app_id, blk.state)
         assert blk.grant is not None
+        with TRACER.span("ctl.resume", cat="ctl", app_id=app_id,
+                         user=blk.request.user):
+            return self._resume_body(app_id, blk, n_chips)
+
+    def _resume_body(self, app_id: str, blk,
+                     n_chips: Optional[int]) -> BlockGrant:
         old = blk.grant
         old_pod = old.coords[0][0] if old.coords else None
         n = n_chips or old.n_chips
@@ -502,6 +519,11 @@ class ClusterController:
         self.pods.set_phase(pod_id, POD_DEAD, now=now)
         self.registry.store_pods(self.pods.snapshot())
         victims = self._evict_pod_residents(pod_id, reason, now=now)
+        # postmortem after the eviction sweep: the victims' final
+        # preempted/state events and spans are in the recorder's ring by
+        # now, so the artifact captures each one's last moments
+        RECORDER.dump("pod_death", apps=victims, now=now,
+                      detail={"pod": pod_id, "reason": reason})
         self.scheduler.pump(now)
         return victims
 

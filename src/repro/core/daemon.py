@@ -36,6 +36,7 @@ must not queue behind a long-running step command.
 from __future__ import annotations
 
 import dataclasses
+import os
 import queue
 import threading
 import time
@@ -48,6 +49,10 @@ from repro.core.events import BlockEvent, EventBus
 from repro.core.topology import Topology
 from repro.engine import AutostepEngine, PacingPolicy
 from repro.federation.pods import POD_DEAD
+from repro.obs.bridge import wire_bus
+from repro.obs.flight import RECORDER
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import TRACER
 
 
 @dataclasses.dataclass
@@ -62,6 +67,14 @@ class Command:
     claimed: bool = False     # pump took it (or the submitter gave up)
     done: threading.Event = dataclasses.field(
         default_factory=threading.Event)
+    # trace context captured at enqueue: the pump parents the queue-wait
+    # and exec spans back to the submitting request (None = tracing off)
+    ctx: Optional[Tuple[str, str]] = None
+    t_enq: float = 0.0        # perf_counter at enqueue (tracing on only)
+    # request correlation id captured at enqueue: the pump stamps it on
+    # the exec span so events published there carry it too (the id would
+    # otherwise be stranded on the submitting thread's span stack)
+    rid: Optional[str] = None
 
 
 class ClusterDaemon:
@@ -85,11 +98,20 @@ class ClusterDaemon:
                  tick_interval_s: float = 0.05,
                  autostep_interval_s: float = 0.001,
                  pacing: Optional[PacingPolicy] = None,
-                 placer=None):
+                 placer=None, trace: bool = False):
         self.ctl = ClusterController(topo, devices=devices,
                                      ckpt_root=ckpt_root,
                                      state_path=state_path,
                                      placer=placer)
+        # observability: the metrics bridge and flight recorder are
+        # passive bus subscribers (always on — they mutate nothing in the
+        # control plane); tracing stays opt-in so deterministic inline
+        # mode is bit-identical by default
+        if trace:
+            TRACER.enable()
+        wire_bus(self.ctl.bus)
+        RECORDER.configure(
+            dir=os.path.join(ckpt_root, "postmortems")).install(self.ctl.bus)
         # the autostep engine drives RUNNING blocks from the pump thread
         # (or inline via autostep_round); the controller drains a victim's
         # in-flight window through it before a preemption suspend
@@ -196,19 +218,44 @@ class ClusterDaemon:
                     if cmd.claimed or cmd.done.is_set():
                         continue     # submitter already gave up on it
                     cmd.claimed = True
+                    t_claim = time.perf_counter()
+                    if TRACER.enabled and cmd.t_enq:
+                        # queue-wait and exec tile the caller's call span:
+                        # the exec span starts at the exact instant the
+                        # queue span ends
+                        TRACER.record(f"daemon.queue:{cmd.name}",
+                                      cmd.t_enq, t_claim, cat="daemon",
+                                      ctx=cmd.ctx)
+                    rid_arg = ({"request_id": cmd.rid} if cmd.rid else {})
                     try:
-                        with runtime_check.serialized("control-plane"):
-                            cmd.result = self._table[cmd.name](*cmd.args,
-                                                               **cmd.kwargs)
+                        with TRACER.span(f"daemon.exec:{cmd.name}",
+                                         cat="daemon", ctx=cmd.ctx,
+                                         t0=t_claim, **rid_arg):
+                            with runtime_check.serialized("control-plane"):
+                                cmd.result = self._table[cmd.name](
+                                    *cmd.args, **cmd.kwargs)
                     except BaseException as e:   # delivered to the caller
                         cmd.error = e
+                    dt = time.perf_counter() - t_claim
+                    REGISTRY.observe("repro_daemon_command_seconds", dt,
+                                     labels={"name": cmd.name})
                 cmd.done.set()
             if time.monotonic() - last_tick >= self.tick_interval_s:
                 with self._serial:
+                    t0 = time.perf_counter()
                     try:
                         self.ctl.tick()
                     except Exception:
-                        pass   # a tick must never kill the service loop
+                        # a tick must never kill the service loop — but a
+                        # crashing control plane is exactly what the
+                        # flight recorder exists to explain
+                        RECORDER.dump("daemon_crash",
+                                      detail={"where": "tick",
+                                              "error":
+                                              traceback.format_exc()})
+                    dt = time.perf_counter() - t0
+                    REGISTRY.observe("repro_pump_tick_seconds", dt)
+                    REGISTRY.sample("pump_tick_ms", dt * 1e3)
                 last_tick = time.monotonic()
 
     def _sync_pod_workers(self) -> None:
@@ -264,25 +311,31 @@ class ClusterDaemon:
         if name not in self._table:
             raise ValueError(f"unknown daemon command {name!r}")
         if not self.running or threading.current_thread() is self._thread:
-            with self._serial:
-                with runtime_check.serialized("control-plane"):
-                    return self._table[name](*args, **kwargs)
-        cmd = Command(name=name, args=args, kwargs=kwargs)
-        self._cmds.put(cmd)
-        # bounded waits: a stop() racing this enqueue (queue drained just
-        # before our put) would otherwise leave the caller parked forever
-        # on a command no thread will ever serve
-        while not cmd.done.wait(0.2):
-            if not self.running:
+            with TRACER.span(f"daemon.call:{name}", cat="daemon"):
                 with self._serial:
-                    if not cmd.claimed and not cmd.done.is_set():
-                        # orphaned by the race: run it inline (a later
-                        # start() skips claimed commands)
-                        cmd.claimed = True
+                    with runtime_check.serialized("control-plane"):
                         return self._table[name](*args, **kwargs)
-        if cmd.error is not None:
-            raise cmd.error
-        return cmd.result
+        with TRACER.span(f"daemon.call:{name}", cat="daemon"):
+            cmd = Command(name=name, args=args, kwargs=kwargs)
+            if TRACER.enabled:
+                cmd.ctx = TRACER.context()
+                cmd.rid = TRACER.current_request_id()
+                cmd.t_enq = time.perf_counter()
+            self._cmds.put(cmd)
+            # bounded waits: a stop() racing this enqueue (queue drained
+            # just before our put) would otherwise leave the caller parked
+            # forever on a command no thread will ever serve
+            while not cmd.done.wait(0.2):
+                if not self.running:
+                    with self._serial:
+                        if not cmd.claimed and not cmd.done.is_set():
+                            # orphaned by the race: run it inline (a later
+                            # start() skips claimed commands)
+                            cmd.claimed = True
+                            return self._table[name](*args, **kwargs)
+            if cmd.error is not None:
+                raise cmd.error
+            return cmd.result
 
     # ----------------------------------------------------- command bodies
     def _run_steps(self, targets, max_inflight: Optional[int] = None):
@@ -314,8 +367,14 @@ class ClusterDaemon:
             raise ValueError(
                 f"{app_id} has no generate surface: needs an active paged "
                 f"serve job (activate with kind=serve, paged=true)")
-        sid = start(list(prompt), max_new_tokens=max_new_tokens,
-                    eos_id=eos_id)
+        # bind the block to the submitting request's trace (if any): the
+        # engine's later decode rounds for this block join it, giving one
+        # connected gateway -> queue -> admit -> decode trace per request
+        TRACER.bind(app_id)
+        with TRACER.span("serve.submit", cat="serve", app_id=app_id,
+                         user=blk.request.user):
+            sid = start(list(prompt), max_new_tokens=max_new_tokens,
+                        eos_id=eos_id)
         self.ctl.bus.publish("session", app_id=app_id,
                              block_id=blk.block_id, user=blk.request.user,
                              now=now, action="submitted", session=sid,
@@ -495,10 +554,15 @@ class ClusterDaemon:
     def interference_report(self):
         return self.ctl.interference_report()
 
-    def status(self, app_id: str) -> Dict:
-        """One block's public lifecycle view (what the gateway serves)."""
+    def status(self, app_id: str,
+               _stragglers: Optional[List[str]] = None) -> Dict:
+        """One block's public lifecycle view (what the gateway serves).
+        ``_stragglers`` lets ``list_apps`` compute the straggler set once
+        for the whole table instead of once per row."""
         blk = self.ctl.registry.get(app_id)
         rt = self.ctl.runtimes.get(app_id)
+        stragglers = (_stragglers if _stragglers is not None
+                      else self.ctl.monitor.stragglers())
         return {
             "app_id": app_id,
             "user": blk.request.user,
@@ -521,6 +585,7 @@ class ClusterDaemon:
             "failure": blk.failure_reason,
             "steps": getattr(rt, "step_count", 0) if rt else 0,
             "mfu": self.ctl.monitor.mfu(blk.block_id),
+            "straggler": blk.block_id in stragglers,
             "autostep": self.engine.describe(app_id),
         }
 
@@ -529,7 +594,8 @@ class ClusterDaemon:
         with reg._lock:
             ids = [a for a, b in reg.apps.items()
                    if user is None or b.request.user == user]
-        return [self.status(a) for a in ids]
+        stragglers = self.ctl.monitor.stragglers()
+        return [self.status(a, _stragglers=stragglers) for a in ids]
 
     def cluster_report(self) -> Dict:
         topo = self.ctl.topo
@@ -549,6 +615,26 @@ class ClusterDaemon:
             "preemption": self.ctl.monitor.preemption_report(),
             "compile": self.ctl.monitor.compile_report(),
             "roofline": self.ctl.monitor.roofline_report(),
+            "obs": self.obs_report(),
+        }
+
+    def obs_report(self) -> Dict:
+        """Observability summary for the dashboard tiles: key latency
+        histograms, abuse counters, straggler set, recent postmortems and
+        the sparkline series rings."""
+        stragglers = self.ctl.monitor.stragglers()
+        REGISTRY.set_gauge("repro_stragglers", len(stragglers))
+        return {
+            "trace_enabled": TRACER.enabled,
+            "pump_tick": REGISTRY.hist_summary("repro_pump_tick_seconds"),
+            "admission_wait": REGISTRY.hist_summary(
+                "repro_admission_wait_seconds"),
+            "http_429": REGISTRY.counter_total("repro_http_429_total"),
+            "http_413": REGISTRY.counter_total("repro_http_413_total"),
+            "sse_streams": REGISTRY.gauge_value("repro_sse_streams"),
+            "stragglers": sorted(stragglers),
+            "postmortems": RECORDER.dumps(),
+            "series": REGISTRY.series(),
         }
 
     def events_since(self, after_seq: int = 0,

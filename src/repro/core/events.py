@@ -33,6 +33,8 @@ import threading
 import time
 from typing import Callable, Deque, Dict, List, Optional, Set
 
+from repro.obs.trace import TRACER
+
 
 # The declared event taxonomy — the single schema every producer literal,
 # consumer match and the dashboard's SSE subscription list are checked
@@ -68,6 +70,8 @@ EVENT_KINDS = (
                     #   pod, name, phase, n_chips)
     "migrated",     # a block came back on a different pod than it was
                     #   evicted from (payload: from_pod, to_pod, n_chips)
+    "postmortem",   # the flight recorder wrote a crash artifact (payload:
+                    #   reason, name, n_events, n_spans)
 )
 
 KINDS = frozenset(EVENT_KINDS)
@@ -132,6 +136,14 @@ class EventBus:
         """Emit one event.  ``now`` keeps the timestamp on the model clock
         under a simulated-clock driver (same convention as scheduler/
         registry ``now=`` everywhere else)."""
+        if TRACER.enabled and "request_id" not in payload:
+            # correlate events with the gateway request that caused them:
+            # the request id rides the tracer's thread-local span stack
+            # from the HTTP handler down into whatever publishes.  Inert
+            # when tracing is off — the payload is byte-identical.
+            rid = TRACER.current_request_id()
+            if rid is not None:
+                payload["request_id"] = rid
         with self._cond:
             self._seq += 1
             ev = BlockEvent(seq=self._seq,

@@ -1,6 +1,15 @@
 """Monitoring: per-block heartbeats, step-time EWMA, straggler detection,
 usage accounting.  The paper's step (6): "the administrator and automated
 system will monitor the usage of all running users".
+
+The Monitor is one observability consumer among several: it aggregates
+in-process roll-ups (EWMAs, straggler sets, usage totals) that feed the
+scheduler and dashboards, while ``repro.obs`` carries the rest of the
+story — the metrics bridge turns the same bus events into Prometheus
+series, the tracer records request-scoped spans, and the flight recorder
+keeps the raw event tail for postmortems.  ``stragglers()`` is surfaced
+both per-block (``daemon.status``) and as the ``repro_stragglers``
+gauge.
 """
 from __future__ import annotations
 

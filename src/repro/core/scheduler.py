@@ -82,6 +82,7 @@ from repro.core.block import BlockGrant, BlockState
 from repro.core.inflight import InflightWindow
 from repro.core.partition import AllocationError
 from repro.core.policy import SchedulingPolicy
+from repro.obs.trace import TRACER
 
 
 @dataclasses.dataclass
@@ -199,16 +200,24 @@ class BlockScheduler:
         """
         now = now if now is not None else time.time()
         blk = self.ctl.registry.get(app_id)
-        if not self.ctl.partitioner.shape_possible(blk.request.n_chips):
-            # never admissible (invalid size / exceeds pod geometry):
-            # waitlisting would park it forever, so reject up front
-            self.ctl.registry.deny(
-                app_id, f"{blk.request.n_chips} chips can never fit this pod")
+        with TRACER.span("sched.submit", cat="sched", app_id=app_id,
+                         user=blk.request.user,
+                         n_chips=blk.request.n_chips) as sp:
+            if not self.ctl.partitioner.shape_possible(blk.request.n_chips):
+                # never admissible (invalid size / exceeds pod geometry):
+                # waitlisting would park it forever, so reject up front
+                self.ctl.registry.deny(
+                    app_id,
+                    f"{blk.request.n_chips} chips can never fit this pod")
+                sp.set(outcome="denied")
+                return None
+            entry = self._entry_for(app_id, job, priority, pod, deadline_s,
+                                    now)
+            if self._submit_unit([entry], now):
+                sp.set(outcome="admitted")
+                return self.ctl.registry.get(app_id).grant
+            sp.set(outcome="queued")
             return None
-        entry = self._entry_for(app_id, job, priority, pod, deadline_s, now)
-        if self._submit_unit([entry], now):
-            return self.ctl.registry.get(app_id).grant
-        return None
 
     def submit_gang(self, app_ids: List[str],
                     jobs: Optional[Mapping[str, object]] = None,
@@ -546,6 +555,15 @@ class BlockScheduler:
         rides the pump's own bookkeeping instead of a second inventory
         scan per tick (which matters once the autostep engine has the
         pump looping at step cadence)."""
+        if not TRACER.enabled:
+            return self._pump_body(now, sample_util)
+        with TRACER.span("sched.pump", cat="sched") as sp:
+            admitted = self._pump_body(now, sample_util)
+            sp.set(admitted=len(admitted))
+            return admitted
+
+    def _pump_body(self, now: Optional[float],
+                   sample_util: bool) -> List[str]:
         admitted: List[str] = []
         # `now or time.time()` would swap wall clock in for model-time 0.0
         # and corrupt wait accounting under a simulated clock
@@ -609,11 +627,13 @@ class BlockScheduler:
             if not victims:
                 continue
             label = (unit[0].gang_id if len(unit) > 1 else unit[0].app_id)
-            for victim in victims:
-                self.ctl.preempt(
-                    victim, reason=f"evicted for {label} "
-                                   f"(priority {unit[0].priority})",
-                    now=now)
+            with TRACER.span("sched.evict", cat="sched", target=label,
+                             victims=len(victims)):
+                for victim in victims:
+                    self.ctl.preempt(
+                        victim, reason=f"evicted for {label} "
+                                       f"(priority {unit[0].priority})",
+                        now=now)
             return True
         return False
 

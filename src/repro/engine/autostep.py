@@ -42,6 +42,8 @@ from typing import Dict, List, Optional
 from repro.analysis import runtime_check
 from repro.core.block import BlockState
 from repro.engine.pacing import BlockView, PacingPolicy
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import TRACER
 
 #: lifecycle states from which a block can never run again — the engine
 #: drops its drive (an EXPIRED/DONE block re-enabled later starts fresh)
@@ -306,6 +308,7 @@ class AutostepEngine:
         if not self._drives:
             self.last_round_busy = False
             return 0
+        round_t0 = time.perf_counter()
         t = now if now is not None else time.time()
         reg = self.ctl.registry
         shares = self._pod_budget_shares()
@@ -332,10 +335,15 @@ class AutostepEngine:
             self._refresh_grant(drive, blk)
             if pod is not None and drive.pod != pod:
                 continue             # another pod's worker drives this one
-            for rec in rt.poll(block=False):
-                self._publish_step(app_id, drive, rec, now)
-                work += 1
-            work += self._harvest_generate(app_id, drive, rt, now)
+            # harvest under a per-app span that joins the block's *bound*
+            # trace (the request that bound it), not the worker thread's
+            # incidental stack — see Tracer.span(parent="binding")
+            with TRACER.span("engine.harvest", cat="engine", app_id=app_id,
+                             parent="binding"):
+                for rec in rt.poll(block=False):
+                    self._publish_step(app_id, drive, rec, now)
+                    work += 1
+                work += self._harvest_generate(app_id, drive, rt, now)
             self._maybe_checkpoint(drive, rt)
             cfg = drive.config
             if cfg.until_steps is not None and \
@@ -409,11 +417,17 @@ class AutostepEngine:
         for view in views:
             self._drives[view.app_id].deficit = view.deficit
         for app_id in plan:
-            runnable[app_id].dispatch()
+            # paged serve decode rounds run synchronously inside
+            # dispatch(), so their spans nest under this one
+            with TRACER.span("engine.dispatch", cat="engine",
+                             app_id=app_id, parent="binding"):
+                runnable[app_id].dispatch()
             drive = self._drives[app_id]
             if app_id in rated:
                 drive.allowance -= 1.0
             work += 1
             pending += 1
         self.last_round_busy = work > 0 or pending > 0
+        REGISTRY.observe("repro_engine_round_seconds",
+                         time.perf_counter() - round_t0)
         return work

@@ -32,6 +32,12 @@ Routes (all JSON in/out, ``Authorization: Bearer <session token>``):
   ``GET  /v1/events/stream``         admin: cluster-wide SSE stream
   ``GET  /v1/profile``               who am I / my session configuration
   ``GET  /v1/profile/cursors``       my persisted event-feed cursors
+  ``GET  /metrics``                  Prometheus text exposition (no auth)
+  ``GET  /v1/trace``                 admin: Chrome-trace JSON of all spans
+  ``GET  /v1/blocks/<id>/trace``     owner: one block's trace
+  ``GET  /v1/postmortems``           admin: flight-recorder artifact index
+  ``GET  /v1/postmortems/<name>``    admin: one postmortem dump
+  ``GET  /v1/access``                admin: recent gateway access log
   ``GET  /ui`` (+ ``/ui/<asset>``)   the browser dashboard (static, no auth
                                      for the assets — data calls need a
                                      session token)
@@ -55,7 +61,8 @@ import os
 import re
 import threading
 import time
-from typing import Dict, List, Optional, Tuple
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
 
 from repro.core.partition import AllocationError
 from repro.core.runtime import JobSpec, SimJobSpec
@@ -63,6 +70,9 @@ from repro.gateway import auth
 from repro.gateway.auth import AuthError
 from repro.gateway.profiles import ProfileStore, UserProfile
 from repro.gateway.ratelimit import RateLimiter
+from repro.obs.flight import RECORDER
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import TRACER
 
 MAX_LONGPOLL_S = 30.0
 MAX_SSE_S = 3600.0          # hard per-connection cap on an SSE stream
@@ -180,6 +190,7 @@ class SSEStream:
         end = time.monotonic() + self.max_s
         next_beat = time.monotonic() + self.heartbeat_s
         after = self.after
+        REGISTRY.add_gauge("repro_sse_streams", 1)
         try:
             # an immediate comment flushes headers so EventSource fires
             # its `open` event before the first real event arrives
@@ -208,6 +219,8 @@ class SSEStream:
                     if chunks:
                         wfile.write("".join(chunks).encode())
                         wfile.flush()
+                        REGISTRY.inc("repro_sse_frames_total",
+                                     len(chunks))
                     after = evs[-1].seq
                     if self.on_cursor is not None:
                         self.on_cursor(after)
@@ -219,6 +232,8 @@ class SSEStream:
                     next_beat = time.monotonic() + self.heartbeat_s
         except (BrokenPipeError, ConnectionResetError, OSError):
             return      # client went away: normal end of stream
+        finally:
+            REGISTRY.add_gauge("repro_sse_streams", -1)
 
 
 class GatewayApi:
@@ -270,14 +285,27 @@ class GatewayApi:
             ("POST", r"^/v1/blocks/(?P<app_id>[\w-]+)/expire$", "expire"),
             ("GET", r"^/v1/events$", "global_events"),
             ("GET", r"^/v1/events/stream$", "global_events_stream"),
+            ("GET", r"^/metrics$", "metrics"),
+            ("GET", r"^/v1/trace$", "trace_export"),
+            ("GET", r"^/v1/blocks/(?P<app_id>[\w-]+)/trace$",
+             "block_trace"),
+            ("GET", r"^/v1/postmortems$", "postmortems"),
+            ("GET", r"^/v1/postmortems/(?P<name>[\w.\-]+)$",
+             "postmortem_get"),
+            ("GET", r"^/v1/access$", "access_log_report"),
             ("GET", r"^/ui/?$", "ui_index"),
             ("GET", r"^/ui/(?P<asset>[\w][\w.\-]*)$", "ui_asset"),
         ]
     ]
 
     #: routes served without a session (liveness probe + dashboard assets
-    #: — the dashboard's *data* calls all authenticate normally)
-    NO_AUTH = frozenset({"ping", "ui_index", "ui_asset"})
+    #: — the dashboard's *data* calls all authenticate normally; /metrics
+    #: follows scrape-agent convention: no auth, but no secrets either —
+    #: metric values and low-cardinality labels only)
+    NO_AUTH = frozenset({"ping", "ui_index", "ui_asset", "metrics"})
+
+    #: bounded in-memory access log (newest last)
+    ACCESS_LOG_SIZE = 512
 
     #: the only routes that accept ?access_token= (EventSource cannot set
     #: headers); everywhere else the token must ride the Authorization
@@ -299,6 +327,10 @@ class GatewayApi:
         self.static_dir = static_dir
         #: set by the server on shutdown so parked SSE streams drain fast
         self.closing = threading.Event()
+        # per-request access log: the HTTP server reports every finished
+        # request here (status + wall latency + correlation id)
+        self._access_lock = threading.Lock()
+        self._access: Deque[Dict] = deque(maxlen=self.ACCESS_LOG_SIZE)
         # registry-backed session persistence: a rebuilt gateway over the
         # same daemon (or a daemon rebooted from its state snapshot)
         # rehydrates stored profiles and event-feed cursors, so sessions
@@ -328,8 +360,31 @@ class GatewayApi:
         if ok:
             return None
         who = "this session" if key else "unauthenticated requests"
+        REGISTRY.inc("repro_http_429_total",
+                     labels={"who": "session" if key else "anonymous"})
         return 429, {"error": f"rate limit exceeded for {who}",
                      "retry_after_s": round(retry, 3)}
+
+    # ------------------------------------------------------- access logging
+    def record_access(self, method: str, path: str, status: int,
+                      dt_s: float, request_id: str) -> None:
+        """Called by the HTTP server after every response is written.
+        Never raises: a logging bug must not kill the connection
+        thread."""
+        try:
+            with self._access_lock:
+                self._access.append({
+                    "t": time.time(), "method": method, "path": path,
+                    "status": int(status), "ms": round(dt_s * 1e3, 3),
+                    "request_id": request_id})
+        except Exception:
+            pass
+
+    def access_log(self, limit: int = 100) -> List[Dict]:
+        """Newest-first slice of the bounded access log."""
+        with self._access_lock:
+            entries = list(self._access)
+        return entries[::-1][:max(1, int(limit))]
 
     # ----------------------------------------------------- session storage
     def _persist_sessions(self, force: bool = False) -> None:
@@ -844,6 +899,46 @@ class GatewayApi:
     def global_events_stream(self, profile, path_args, body, query):
         auth.require_admin(profile)
         return self._stream(profile, query, None)
+
+    # -------------------------------------------------------- observability
+    def metrics(self, profile, path_args, body, query):
+        """Prometheus text exposition of the process-global registry."""
+        return 200, StaticFile(
+            REGISTRY.render().encode(),
+            "text/plain; version=0.0.4; charset=utf-8")
+
+    def trace_export(self, profile, path_args, body, query):
+        """Chrome-trace JSON of every recorded span (open it in
+        chrome://tracing or Perfetto)."""
+        auth.require_admin(profile)
+        return 200, TRACER.chrome_trace()
+
+    def block_trace(self, profile, path_args, body, query):
+        """One block's spans — the owner's view of their request's
+        journey through the control plane."""
+        app_id = path_args["app_id"]
+        self._owned_block(profile, app_id)
+        return 200, TRACER.chrome_trace(app_id=app_id)
+
+    def postmortems(self, profile, path_args, body, query):
+        auth.require_admin(profile)
+        return 200, {"postmortems": RECORDER.dumps()}
+
+    def postmortem_get(self, profile, path_args, body, query):
+        auth.require_admin(profile)
+        dump = RECORDER.read(path_args["name"])
+        if dump is None:
+            raise ApiError(404,
+                           f"no postmortem {path_args['name']!r}")
+        return 200, dump
+
+    def access_log_report(self, profile, path_args, body, query):
+        auth.require_admin(profile)
+        try:
+            limit = int(query.get("limit", 100))
+        except ValueError:
+            raise ApiError(400, "bad limit")
+        return 200, {"access": self.access_log(limit)}
 
     # ------------------------------------------------------------ dashboard
     def _static(self, name: str) -> Tuple[int, object]:

@@ -21,13 +21,17 @@ from __future__ import annotations
 
 import json
 import threading
+import time
 import urllib.parse
+import uuid
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Optional
 
 from repro.gateway.handlers import GatewayApi, SSEStream, StaticFile
 from repro.gateway.profiles import ProfileStore
 from repro.gateway.ratelimit import RateLimiter
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import TRACER
 
 
 class _Handler(BaseHTTPRequestHandler):
@@ -45,11 +49,31 @@ class _Handler(BaseHTTPRequestHandler):
         self.send_response(status)
         self.send_header("Content-Type", "application/json")
         self.send_header("Content-Length", str(len(data)))
+        self.send_header("X-Request-ID", self._rid)
         self.end_headers()
         self.wfile.write(data)
 
     def _dispatch(self, method: str) -> None:
+        # correlation id: honor the client's X-Request-ID, mint one
+        # otherwise; echoed on every response and carried into the trace
+        # context (and, through it, into event payloads)
+        self._rid = (self.headers.get("X-Request-ID")
+                     or f"req-{uuid.uuid4().hex[:12]}")
+        t0 = time.perf_counter()
         parsed = urllib.parse.urlsplit(self.path)
+        with TRACER.span(f"http.{method}:{parsed.path}", cat="http",
+                         request_id=self._rid):
+            status = self._serve_one(method, parsed)
+        dt = time.perf_counter() - t0
+        REGISTRY.inc("repro_http_requests_total",
+                     labels={"method": method, "status": str(status)})
+        REGISTRY.observe("repro_http_request_seconds", dt,
+                         labels={"method": method})
+        self.api.record_access(method, parsed.path, status, dt, self._rid)
+
+    def _serve_one(self, method: str, parsed) -> int:
+        """Handle one request; returns the response status (for the
+        access log / metrics — the response itself is already written)."""
         query = {k: v[0] for k, v in
                  urllib.parse.parse_qs(parsed.query).items()}
         length = int(self.headers.get("Content-Length") or 0)
@@ -58,10 +82,11 @@ class _Handler(BaseHTTPRequestHandler):
             # socket; close the connection (the unread body would otherwise
             # be parsed as the next pipelined request)
             self.close_connection = True
+            REGISTRY.inc("repro_http_413_total", labels={"method": method})
             self._send_json(413, {
                 "error": f"request body {length} bytes exceeds the "
                          f"{self.max_body_bytes}-byte cap"})
-            return
+            return 413
         body = self.rfile.read(length) if length else b""
         try:
             status, obj = self.api.handle(method, parsed.path, query,
@@ -77,17 +102,20 @@ class _Handler(BaseHTTPRequestHandler):
             self.send_header("Content-Type", "text/event-stream")
             self.send_header("Cache-Control", "no-cache")
             self.send_header("Connection", "close")
+            self.send_header("X-Request-ID", self._rid)
             self.end_headers()
             obj.serve(self.wfile)
-            return
+            return status
         if isinstance(obj, StaticFile):
             self.send_response(status)
             self.send_header("Content-Type", obj.content_type)
             self.send_header("Content-Length", str(len(obj.data)))
+            self.send_header("X-Request-ID", self._rid)
             self.end_headers()
             self.wfile.write(obj.data)
-            return
+            return status
         self._send_json(status, obj)
+        return status
 
     def do_GET(self) -> None:
         self._dispatch("GET")

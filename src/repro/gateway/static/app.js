@@ -68,6 +68,37 @@ function renderCluster(rep) {
   $("pods-detail").textContent = pods.map(
     (p) => p.name + " " + p.free_chips + "/" + p.n_chips +
            (p.phase !== "ready" ? " (" + p.phase + ")" : "")).join(" · ");
+  renderObs(rep.obs);
+}
+
+function sparkline(svg, points) {
+  // points: [[t, v], ...] -> one polyline scaled to the 120x28 viewBox
+  svg.replaceChildren();
+  if (!points || points.length < 2) return;
+  const vs = points.map((p) => p[1]);
+  const vmax = Math.max(...vs, 1e-9);
+  const step = 120 / (points.length - 1);
+  const pts = points.map((p, i) =>
+    (i * step).toFixed(1) + "," + (26 - 24 * p[1] / vmax).toFixed(1));
+  const line = document.createElementNS("http://www.w3.org/2000/svg",
+                                        "polyline");
+  line.setAttribute("points", pts.join(" "));
+  svg.appendChild(line);
+}
+
+function renderObs(obs) {
+  if (!obs) return;
+  $("pump-p90").textContent = obs.pump_tick && obs.pump_tick.count
+    ? (obs.pump_tick.p90 * 1000).toFixed(1) + "ms" : "—";
+  sparkline($("pump-spark"), (obs.series || {}).pump_tick_ms);
+  $("http-429").textContent = obs.http_429;
+  $("http-413").textContent = obs.http_413;
+  $("sse-streams").textContent = obs.sse_streams;
+  $("stragglers").textContent = (obs.stragglers || []).length;
+  const pms = obs.postmortems || [];
+  $("postmortems").textContent = pms.length;
+  $("postmortem-detail").textContent = pms.length
+    ? pms[0].reason + " · " + pms[0].name : "";
 }
 
 function fmtDeadline(b) {
@@ -86,7 +117,8 @@ function blockRow(b) {
     ["<span class=mono>" + b.app_id + "</span>"],
     [b.user],
     ["<span class=state data-tone=" + (TONES[b.state] || "") + ">" +
-     b.state + "</span>"],
+     b.state + "</span>" +
+     (b.straggler ? "<span class=straggler-badge>straggler</span>" : "")],
     [b.pod == null ? "—" : "pod " + b.pod],
     [b.n_chips, "num"],
     [b.steps, "num"],
@@ -166,6 +198,7 @@ function logEvent(ev) {
     ev.kind === "pod" ? "pod " + ev.pod + " (" + ev.name + ")" : null,
     ev.kind === "migrated"
       ? "pod " + ev.from_pod + " → pod " + ev.to_pod : null,
+    ev.kind === "postmortem" ? ev.name : null,
   ].filter(Boolean).join(" · ");
   li.append(seq, kind, detail);
   log.prepend(li);
@@ -184,7 +217,7 @@ function openStream(path) {
   for (const kind of ["state", "admitted", "enqueued", "dequeued",
                       "preempted", "resumed", "registered", "autostep",
                       "step", "compile", "utilization", "session",
-                      "generate", "pod", "migrated"]) {
+                      "generate", "pod", "migrated", "postmortem"]) {
     es.addEventListener(kind, (msg) => {
       const ev = JSON.parse(msg.data);
       if (ev.kind !== "step" && ev.kind !== "utilization") refreshSoon();

@@ -47,6 +47,7 @@ import numpy as np
 
 from repro.models import model as model_lib
 from repro.models.config import ModelConfig
+from repro.obs.trace import TRACER
 
 #: fixed checkpoint budget for the JSON-encoded host session metadata (the
 #: CheckpointManager requires static leaf shapes across save/restore)
@@ -260,12 +261,17 @@ class DecodeScheduler:
             self._next_id += 1
         if sid in self.sessions:
             raise ValueError(f"duplicate session id {sid!r}")
-        sess = GenSession(sid=sid, prompt=prompt,
-                          max_new_tokens=int(max_new_tokens),
-                          eos_id=(None if eos_id is None else int(eos_id)),
-                          submitted_t=self._time_fn())
-        self.sessions[sid] = sess
-        self.queued.append(sess)
+        # serve.admit is the DecodeScheduler's admission decision; on the
+        # generate path it nests under the daemon's serve.submit span
+        with TRACER.span("serve.admit", cat="serve", session=sid,
+                         prompt_tokens=len(prompt)):
+            sess = GenSession(sid=sid, prompt=prompt,
+                              max_new_tokens=int(max_new_tokens),
+                              eos_id=(None if eos_id is None
+                                      else int(eos_id)),
+                              submitted_t=self._time_fn())
+            self.sessions[sid] = sess
+            self.queued.append(sess)
         return sess.sid
 
     @property
@@ -291,8 +297,12 @@ class DecodeScheduler:
         lifecycle markers (the engine maps these onto bus events)."""
         t = now if now is not None else self._time_fn()
         emissions: List[Dict[str, Any]] = []
-        self._admit(emissions, t)
-        self._decode_round(emissions, t)
+        # on the engine path this nests under engine.dispatch (decode
+        # rounds run synchronously inside the runtime's dispatch())
+        with TRACER.span("serve.decode_round", cat="serve") as sp:
+            self._admit(emissions, t)
+            self._decode_round(emissions, t)
+            sp.set(emissions=len(emissions))
         return emissions
 
     # ------------------------------------------------------------ admission

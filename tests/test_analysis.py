@@ -119,7 +119,8 @@ def test_describe_reports_learned_model(capsys):
     assert set(model["events"]["kinds"]) == {
         "registered", "state", "enqueued", "dequeued", "admitted",
         "preempted", "resumed", "step", "compile", "utilization",
-        "autostep", "session", "generate", "pod", "migrated"}
+        "autostep", "session", "generate", "pod", "migrated",
+        "postmortem"}
 
 
 # ------------------------------------------------------ lifecycle properties
